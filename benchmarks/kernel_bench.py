@@ -1,0 +1,81 @@
+"""Kernel micro-benchmarks (interpret-mode correctness + jnp-twin timing).
+
+Wall-clock on CPU is NOT the TPU story — the derived column therefore also
+reports the analytic VMEM working set and arithmetic intensity per tile,
+which is what the TPU roofline consumes.  The jnp twin (chunked attention /
+einsum gmm) is timed as the XLA-fused reference the Pallas kernel must beat
+on real hardware.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+Row = Tuple[str, float, str]
+
+
+def _time(fn, *args, n=5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_rmsnorm() -> List[Row]:
+    rows = []
+    for (r, h) in [(1024, 2048), (4096, 1024)]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (r, h), jnp.float32)
+        s = jnp.ones((h,), jnp.float32)
+        us_ref = _time(lambda: ref.rmsnorm_ref(x, s))
+        vmem_kib = (256 * h * 4 * 2) / 1024
+        rows.append((f"rmsnorm.jnp_ref.{r}x{h}", us_ref,
+                     f"tile_vmem={vmem_kib:.0f}KiB ai=O(1)"))
+    return rows
+
+
+def bench_flash() -> List[Row]:
+    rows = []
+    b, s, nh, d = 1, 1024, 4, 128
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, s, nh, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, s, nh, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (b, s, nh, d), jnp.float32)
+    us_naive = _time(lambda: ref.flash_attention_ref(q, k, v, scale=0.088))
+    from repro.models.attention import chunked_attention
+    us_chunk = _time(lambda: chunked_attention(q, k, v, 0.088, block=128))
+    # per-tile VMEM: q(128xd)+k(128xd)+v(128xd)+acc ≈
+    tile = (128 * d * 4 * 4) / 1024
+    ai = (2 * 128 * 128 * d) / ((128 * d * 2 + 128 * d * 2) * 2)
+    rows.append((f"attn.naive_ref.s{s}", us_naive,
+                 f"act_bytes={5 * b * nh * s * s * 2}"))
+    rows.append((f"attn.chunked_jnp.s{s}", us_chunk,
+                 f"tile_vmem={tile:.0f}KiB ai={ai:.0f}flops/B"))
+    return rows
+
+
+def bench_gmm() -> List[Row]:
+    from repro.kernels.moe_gmm import pad_groups
+    E, K, N, bm = 8, 256, 512, 64
+    sizes = np.full(E, 128)
+    x = jax.random.normal(jax.random.PRNGKey(4), (int(sizes.sum()), K),
+                          jnp.float32)
+    rhs = jax.random.normal(jax.random.PRNGKey(5), (E, K, N), jnp.float32)
+    lhs, emap, _ = pad_groups(x, sizes, bm)
+    us_einsum = _time(lambda: jnp.einsum(
+        "etk,ekn->etn", lhs.reshape(E, -1, K), rhs))
+    mxu = 2 * bm * K * N
+    moved = (bm * K + K * N + bm * N) * 4
+    rows = [(f"gmm.einsum_ref.E{E}", us_einsum,
+             f"tile_ai={mxu / moved:.0f}flops/B")]
+    return rows
+
+
+ALL = [bench_rmsnorm, bench_flash, bench_gmm]

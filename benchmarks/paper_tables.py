@@ -1,0 +1,128 @@
+"""One benchmark per paper table: evaluates the analytical model, times it,
+and checks the paper's published values (derived column)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Tuple
+
+from repro.configs import get_spec
+from repro.core import (PAPER_CONFIG, RecomputePolicy, ZeROStage,
+                        estimate_memory, table10, table4_stages, zero_table)
+from repro.core.params import (device_params, table3_rows,
+                               total_params_paper)
+
+SPEC = get_spec("deepseek-v3")
+GiB = 2 ** 30
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn: Callable, n: int = 200) -> float:
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_table3_params() -> List[Row]:
+    us = _timeit(lambda: total_params_paper(SPEC))
+    total = total_params_paper(SPEC)
+    rows = [("table3.total_params", us, f"{total}=={671_026_522_112}")]
+    per = {r.layers: r.per_layer for r in table3_rows(SPEC)}
+    rows.append(("table3.moe_layer_params", us,
+                 f"{per['Layers 3 - 59']}=={11_507_288_064}"))
+    return rows
+
+
+def bench_table4_pp() -> List[Row]:
+    us = _timeit(lambda: table4_stages(SPEC, 16))
+    st = table4_stages(SPEC, 16)
+    return [
+        ("table4.stage1_params", us, f"{st[1].params}=={46_029_152_256}"),
+        ("table4.stage1_gib", us,
+         f"{st[1].params * 2 / GiB:.1f}~=86"),
+        ("table4.n_stages", us, f"{len(st)}==16"),
+    ]
+
+
+def bench_table6_device() -> List[Row]:
+    us = _timeit(lambda: device_params(SPEC, PAPER_CONFIG))
+    d = device_params(SPEC, PAPER_CONFIG)
+    return [
+        ("table6.total_per_device", us, f"{d.total}=={6_250_364_928}"),
+        ("table6.moe_bytes", us, f"{d.expert * 2}=={11_641_290_752}"),
+        ("table6.non_moe_bytes", us, f"{d.non_expert * 2}=={859_439_104}"),
+    ]
+
+
+def bench_table8_zero() -> List[Row]:
+    us = _timeit(lambda: zero_table(SPEC, PAPER_CONFIG))
+    t = zero_table(SPEC, PAPER_CONFIG)
+    return [
+        ("table8.none_pgo_gib", us, f"{t['none'].total / GiB:.2f}~=81.5"),
+        ("table8.os_opt_gib", us,
+         f"{t['os'].optimizer / GiB:.2f}==5.52"),
+        ("table8.os+g_grads_gib", us,
+         f"{t['os+g'].grads / GiB:.2f}==2.76"),
+        ("table8.os+g+p_params_gib", us,
+         f"{t['os+g+params'].params / GiB:.2f}==1.38"),
+    ]
+
+
+def bench_table10_activations() -> List[Row]:
+    us = _timeit(lambda: table10(SPEC, PAPER_CONFIG))
+    t = table10(SPEC, PAPER_CONFIG)
+    b, s, h, nr = 1, 4096, 7168, 8
+    return [
+        ("table10.ac_none_total", us, f"{t['none']['Total']}"),
+        ("table10.ac_full_total", us,
+         f"{t['full']['Total']}=={8 * b * s * h + 8 * b * s * nr}"),
+        ("table10.mla_none_gib", us, f"{t['none']['MLA'] / GiB:.2f}~=21.59"),
+    ]
+
+
+def bench_section6_buffers() -> List[Row]:
+    us = _timeit(lambda: estimate_memory(SPEC, PAPER_CONFIG))
+    e = estimate_memory(SPEC, PAPER_CONFIG)
+    frac = e.fragmentation / max(e.total - e.fragmentation, 1)
+    return [
+        ("sec6.comm_buffer_gib", us,
+         f"{e.comm_buffers / GiB:.2f}in[0.8,2.0]"),
+        ("sec6.fragmentation_frac", us, f"{frac:.3f}in[0.05,0.30]"),
+        ("sec6.full_estimate_gib", us, f"{e.total / GiB:.2f}"),
+    ]
+
+
+def bench_fp8_whatif() -> List[Row]:
+    """Beyond-paper: the paper scopes FP8 out (§1.2); the model supports it
+    as a dtype policy — what Table 8 would look like at 1-byte weights."""
+    from repro.core import FP8_POLICY
+    cfg = dataclasses.replace(PAPER_CONFIG, dtype=FP8_POLICY)
+    us = _timeit(lambda: zero_table(SPEC, cfg))
+    t = zero_table(SPEC, cfg)
+    bf16 = zero_table(SPEC, PAPER_CONFIG)
+    return [
+        ("fp8.params_gib_vs_bf16", us,
+         f"{t['none'].params / GiB:.2f}vs{bf16['none'].params / GiB:.2f}"),
+        ("fp8.os+g+p_total_gib", us,
+         f"{t['os+g+params'].total / GiB:.2f}"),
+    ]
+
+
+def bench_planner() -> List[Row]:
+    """Beyond-paper: config search (what the analysis is FOR)."""
+    from repro.core import plan
+    run = lambda: plan(SPEC, world_size=1024, hbm_bytes=64 * GiB,
+                       seq_len=4096, top_k=1)
+    us = _timeit(run, n=3)
+    entries = run()
+    best = entries[0].cfg.describe() if entries else "none"
+    return [("planner.best_1024x64GiB", us, best.replace(",", ";"))]
+
+
+ALL = [bench_table3_params, bench_table4_pp, bench_table6_device,
+       bench_table8_zero, bench_table10_activations, bench_section6_buffers,
+       bench_fp8_whatif, bench_planner]

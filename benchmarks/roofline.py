@@ -1,0 +1,373 @@
+"""Roofline analysis (deliverable g).
+
+Terms per (arch × shape) on the single-pod mesh, per chip:
+
+  compute_s    = HLO_FLOPs / 197e12           (bf16 peak per v5e chip)
+  memory_s     = HLO_bytes / 819e9            (HBM bandwidth)
+  collective_s = collective_bytes / 50e9      (ICI link bandwidth)
+
+Sourcing caveat (measured, see EXPERIMENTS.md §Roofline): XLA's
+``cost_analysis()`` counts a ``while``/scan body ONCE regardless of trip
+count, so the full scan-over-layers module under-reports by ~L×.  We
+therefore compile small UNROLLED probe modules (1 and 2 layers, same mesh,
+same shardings, same per-microbatch shapes) and compose:
+
+  cost(L) = io + L · layer        (linear in L at fixed batch)
+
+solving {io, layer} from the two probes — three probes when two layer kinds
+exist (dense+MoE, or encoder+decoder).  Optimizer cost is probed separately
+(adamw on the full stacked state, no scan → exact).  Composed totals are
+cross-checked against the full-module numbers (which bound from below) and
+against analytic 6·N·D MODEL_FLOPS.
+
+Known residual undercounts (documented, small): the RWKV time-scan body
+(outer-product recurrence, no matmuls — projections dominate) and chunked-
+attention KV-block scans in hillclimb variants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip (TPU v5e-class)
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+GiB = 2 ** 30
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+ROOF_DIR = os.path.join(ART, "roofline")
+DRY_DIR = os.path.join(ART, "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# probe machinery (imports jax lazily — caller must set XLA_FLAGS first)
+# ---------------------------------------------------------------------------
+
+def _probe_variants(spec):
+    """[(tag, spec_variant, coeffs)] with cost = Σ coeffs[k]·unknown[k];
+    unknowns ordered ('io', kinds...)."""
+    import dataclasses as dc
+    if spec.encoder is not None:
+        enc = spec.encoder
+        mk = lambda d, e: dc.replace(spec, n_layers=d,
+                                     encoder=dc.replace(enc, n_layers=e))
+        return (["io", "dec", "enc"],
+                [("d1e1", mk(1, 1), {"io": 1, "dec": 1, "enc": 1}),
+                 ("d2e1", mk(2, 1), {"io": 1, "dec": 2, "enc": 1}),
+                 ("d1e2", mk(1, 2), {"io": 1, "dec": 1, "enc": 2})],
+                {"dec": spec.n_layers, "enc": enc.n_layers})
+    if spec.is_moe and spec.moe.first_k_dense > 0:
+        import dataclasses as dc
+        moe0 = dc.replace(spec.moe, first_k_dense=0)
+        moe1 = dc.replace(spec.moe, first_k_dense=1)
+        return (["io", "dense", "moe"],
+                [("dense1", dc.replace(spec, n_layers=1, moe=moe1),
+                  {"io": 1, "dense": 1}),
+                 ("moe1", dc.replace(spec, n_layers=1, moe=moe0),
+                  {"io": 1, "moe": 1}),
+                 ("moe2", dc.replace(spec, n_layers=2, moe=moe0),
+                  {"io": 1, "moe": 2})],
+                {"dense": spec.n_dense_layers(), "moe": spec.n_moe_layers()})
+    if spec.is_moe:
+        import dataclasses as dc
+        return (["io", "moe"],
+                [("moe1", dc.replace(spec, n_layers=1), {"io": 1, "moe": 1}),
+                 ("moe2", dc.replace(spec, n_layers=2), {"io": 1, "moe": 2})],
+                {"moe": spec.n_layers})
+    import dataclasses as dc
+    return (["io", "layer"],
+            [("l1", dc.replace(spec, n_layers=1), {"io": 1, "layer": 1}),
+             ("l2", dc.replace(spec, n_layers=2), {"io": 1, "layer": 2})],
+            {"layer": spec.n_layers})
+
+
+def _solve(unknowns, rows: List[Tuple[Dict[str, int], Dict[str, float]]]
+           ) -> Dict[str, Dict[str, float]]:
+    """Solve per-metric linear systems (tiny, exact via numpy lstsq)."""
+    import numpy as np
+    metrics = rows[0][1].keys()
+    A = np.array([[c.get(u, 0) for u in unknowns] for c, _ in rows], float)
+    out = {u: {} for u in unknowns}
+    for m in metrics:
+        b = np.array([v[m] for _, v in rows], float)
+        x, *_ = np.linalg.lstsq(A, b, rcond=None)
+        for u, val in zip(unknowns, x):
+            out[u][m] = float(max(val, 0.0))
+    return out
+
+
+def _grad_probe(arch, shape_name, vspec, mesh, n_micro, build_kw):
+    """Compile loss+grad (no optimizer) at the per-microbatch shape."""
+    import jax
+    from repro.core.parallel_config import RecomputePolicy, ZeROStage
+    from repro.launch.dryrun import collective_bytes, _fake_state
+    from repro.launch.specs import SHAPES, batch_shardings, batch_specs, \
+        spec_for_shape
+    from repro.models import build_model
+    from repro.models.transformer import ModelOptions
+    from repro.parallel.axes import axis_rules
+    from repro.parallel.sharding import grad_shardings, state_shardings
+
+    spec = spec_for_shape(vspec, shape_name)
+    info = SHAPES[shape_name]
+    opts = ModelOptions(attn_impl=build_kw.get("attn_impl", "naive"),
+                        recompute=RecomputePolicy(
+                            build_kw.get("recompute", "none")),
+                        capacity_factor=build_kw.get("capacity_factor", 1.25),
+                        scan_layers=False,
+                        moe_impl=build_kw.get("moe_impl", "scatter"))
+    model = build_model(spec, opts)
+    z = ZeROStage(build_kw.get("zero", "os+g"))
+    micro_b = max(info["batch"] // n_micro, 1)
+    batch = batch_specs(spec, micro_b, info["seq"])
+    abstract_params = model.abstract_params()
+
+    def grad_step(params, b):
+        (loss, _), g = jax.value_and_grad(model.loss, has_aux=True)(params, b)
+        return g, loss
+
+    with axis_rules(mesh):
+        p_sh = state_shardings(_fake_state(abstract_params), mesh, z).params
+        g_sh = grad_shardings(abstract_params, mesh, z)
+        b_sh = batch_shardings(batch, mesh)
+        lowered = jax.jit(grad_step, in_shardings=(p_sh, b_sh),
+                          out_shardings=(g_sh, None)
+                          ).lower(abstract_params, batch)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(coll["total_bytes"])}
+
+
+def _opt_probe(arch, mesh, build_kw):
+    """Compile adamw_update alone on the FULL stacked state (no scan —
+    exact cost)."""
+    import jax
+    from repro.core.parallel_config import ZeROStage
+    from repro.launch.dryrun import collective_bytes
+    from repro.configs import get_spec
+    from repro.models import build_model
+    from repro.optim.adamw import AdamWConfig, adamw_update, init_train_state
+    from repro.parallel.axes import axis_rules
+    from repro.parallel.sharding import grad_shardings, state_shardings
+
+    spec = get_spec(arch)
+    model = build_model(spec)
+    z = ZeROStage(build_kw.get("zero", "os+g"))
+    abstract_state = jax.eval_shape(init_train_state, model.abstract_params())
+    abstract_grads = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, "float32"),
+        model.abstract_params())
+    cfg = AdamWConfig()
+
+    def step(state, grads):
+        new_state, _ = adamw_update(state, grads, cfg)
+        return new_state
+
+    with axis_rules(mesh):
+        st_sh = state_shardings(abstract_state, mesh, z)
+        g_sh = grad_shardings(model.abstract_params(), mesh, z)
+        compiled = jax.jit(step, in_shardings=(st_sh, g_sh),
+                           out_shardings=st_sh
+                           ).lower(abstract_state, abstract_grads).compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(coll["total_bytes"])}
+
+
+def probe_costs(arch: str, shape_name: str, *, multi_pod: bool = False,
+                n_micro: int = 1, mesh_shape=None,
+                **build_kw) -> Dict[str, Any]:
+    """Compose per-device (flops, bytes, collective bytes) for the full
+    architecture from unrolled 1/2-layer probe compiles.
+
+    Train: cost = n_micro · (io + Σ count_k·layer_k)  [grad probes]
+                  + optimizer [full-size probe, exact].
+    Prefill/decode: cost = io + Σ count_k·layer_k     [step probes].
+    """
+    from repro.configs import get_spec
+    from repro.launch.dryrun import build_step, collective_bytes, \
+        lower_and_compile
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import SHAPES
+
+    spec = get_spec(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    unknowns, variants, counts = _probe_variants(spec)
+    kind = SHAPES[shape_name]["kind"]
+
+    rows = []
+    probe_meta = {}
+    for tag, vspec, coeffs in variants:
+        if kind == "train":
+            vals = _grad_probe(arch, shape_name, vspec, mesh, n_micro,
+                               build_kw)
+        else:
+            built = build_step(arch, shape_name, scan_layers=False,
+                               n_micro=1, spec_override=vspec, **build_kw)
+            art = lower_and_compile(built, mesh)
+            cost = art["compiled"].cost_analysis()
+            coll = collective_bytes(art["compiled"].as_text())
+            vals = {"flops": float(cost.get("flops", 0.0)),
+                    "bytes": float(cost.get("bytes accessed", 0.0)),
+                    "coll_bytes": float(coll["total_bytes"])}
+        rows.append((coeffs, vals))
+        probe_meta[tag] = dict(vals)
+    solved = _solve(unknowns, rows)
+
+    total = {m: solved["io"][m] for m in ("flops", "bytes", "coll_bytes")}
+    for k, n in counts.items():
+        for m in total:
+            total[m] += solved[k][m] * n
+    if kind == "train":
+        opt = _opt_probe(arch, mesh, build_kw)
+        probe_meta["optimizer"] = opt
+        for m in total:
+            total[m] = total[m] * n_micro + opt[m]
+    return {"arch": arch, "shape": shape_name,
+            "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+            "unknowns": solved, "counts": counts, "probes": probe_meta,
+            "composed": total, "n_micro": n_micro, "options": build_kw}
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+def model_flops(arch: str, shape_name: str, n_chips: int = 256) -> float:
+    """Analytic MODEL_FLOPS per chip: 6·N_active·D (train) / 2·N_active·D
+    (forward-only), embeddings excluded, untied head included via N."""
+    from repro.configs import get_spec
+    from repro.launch.specs import SHAPES
+    spec = get_spec(arch)
+    info = SHAPES[shape_name]
+    n_eff = spec.active_params()
+    if not spec.tie_embeddings:
+        n_eff -= spec.embedding_params()     # keep head, drop input gather
+    tokens = {"train": info["batch"] * info["seq"],
+              "prefill": info["batch"] * info["seq"],
+              "decode": info["batch"]}[info["kind"]]
+    mult = 6 if info["kind"] == "train" else 2
+    return mult * n_eff * tokens / n_chips
+
+
+def roofline_terms(composed: Dict[str, float], arch: str, shape_name: str,
+                   n_chips: int = 256) -> Dict[str, Any]:
+    c = composed["flops"] / PEAK_FLOPS
+    m = composed["bytes"] / HBM_BW
+    k = composed["coll_bytes"] / ICI_BW
+    dom = max(("compute", c), ("memory", m), ("collective", k),
+              key=lambda t: t[1])[0]
+    mf = model_flops(arch, shape_name, n_chips)
+    return {"compute_s": c, "memory_s": m, "collective_s": k,
+            "dominant": dom, "model_flops_per_chip": mf,
+            "model_to_hlo_flops": (mf / composed["flops"]
+                                   if composed["flops"] else None),
+            "bound_s": max(c, m, k)}
+
+
+def run_all(shapes=None, archs=None, force: bool = False,
+            tag_suffix: str = "", **kw) -> List[Dict[str, Any]]:
+    from repro.configs import ASSIGNED
+    from repro.launch.specs import SHAPES, shape_skip_reason
+    from repro.configs import get_spec
+    os.makedirs(ROOF_DIR, exist_ok=True)
+    out = []
+    for arch in (archs or ASSIGNED):
+        for shape in (shapes or list(SHAPES)):
+            tag = f"{arch}__{shape}__pod16x16{tag_suffix}"
+            path = os.path.join(ROOF_DIR, tag + ".json")
+            if os.path.exists(path) and not force:
+                with open(path) as f:
+                    out.append(json.load(f))
+                continue
+            if shape_skip_reason(get_spec(arch), shape):
+                rec = {"arch": arch, "shape": shape, "status": "skipped"}
+            else:
+                try:
+                    pc = probe_costs(arch, shape, **kw)
+                    n_chips = 512 if kw.get("multi_pod") else 256
+                    rec = dict(pc, status="ok",
+                               roofline=roofline_terms(pc["composed"],
+                                                       arch, shape,
+                                                       n_chips=n_chips))
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-3000:]}
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            print(f"[roofline {tag}] {rec['status']} "
+                  + (rec.get("error", "") if rec["status"] == "error" else
+                     str({kk: f'{vv:.3g}' for kk, vv in
+                          rec.get('roofline', {}).items()
+                          if isinstance(vv, float)})))
+            out.append(rec)
+    return out
+
+
+def render_table(records: List[Dict[str, Any]]) -> str:
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | MODEL/HLO flops |",
+             "|---|---|---|---|---|---|---|"]
+    for r in records:
+        if r.get("status") != "ok":
+            lines.append(f"| {r.get('arch')} | {r.get('shape')} | - | - | - "
+                         f"| {r.get('status')} | - |")
+            continue
+        t = r["roofline"]
+        ratio = t.get("model_to_hlo_flops")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | {ratio:.2f} |" if ratio else
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.4f} | "
+            f"{t['memory_s']:.4f} | {t['collective_s']:.4f} | "
+            f"{t['dominant']} | - |")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--zero", default="os+g")
+    ap.add_argument("--recompute", default="none")
+    ap.add_argument("--attn", default="naive")
+    ap.add_argument("--moe-impl", default="scatter")
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--capacity-factor", type=float, default=1.25)
+    ap.add_argument("--mesh-shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag-suffix", default="")
+    args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh_shape.split("x")) \
+        if args.mesh_shape else None
+    recs = run_all(shapes=[args.shape] if args.shape else None,
+                   archs=[args.arch] if args.arch else None,
+                   force=args.force, tag_suffix=args.tag_suffix,
+                   zero=args.zero, recompute=args.recompute,
+                   attn_impl=args.attn, moe_impl=args.moe_impl,
+                   n_micro=args.n_micro,
+                   capacity_factor=args.capacity_factor,
+                   mesh_shape=mesh_shape, multi_pod=args.multi_pod)
+    print(render_table(recs))
+
+
+if __name__ == "__main__":
+    import os as _os
+    _os.environ.setdefault("XLA_FLAGS",
+                           "--xla_force_host_platform_device_count=512")
+    main()

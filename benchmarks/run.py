@@ -1,0 +1,66 @@
+"""Benchmark harness entry point: one section per paper table + kernels +
+dry-run/roofline artifact summaries.  Prints ``name,us_per_call,derived``
+CSV (one row per benchmark)."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def _artifact_rows():
+    rows = []
+    art = os.path.join(os.path.dirname(__file__), "artifacts")
+    dry = os.path.join(art, "dryrun")
+    if os.path.isdir(dry):
+        n_ok = n_skip = n_err = 0
+        temp_max = 0
+        for f in os.listdir(dry):
+            if not f.endswith(".json"):
+                continue
+            with open(os.path.join(dry, f)) as fh:
+                d = json.load(fh)
+            s = d.get("status")
+            n_ok += s == "ok"
+            n_skip += s == "skipped"
+            n_err += s == "error"
+            if s == "ok":
+                temp_max = max(temp_max,
+                               d.get("memory", {}).get("temp_size_in_bytes", 0))
+        rows.append(("dryrun.combos_ok", 0.0, f"{n_ok}"))
+        rows.append(("dryrun.combos_skipped", 0.0, f"{n_skip}"))
+        rows.append(("dryrun.combos_error", 0.0, f"{n_err}"))
+        rows.append(("dryrun.max_temp_gib", 0.0, f"{temp_max / 2**30:.1f}"))
+    roof = os.path.join(art, "roofline")
+    if os.path.isdir(roof):
+        n = 0
+        doms = {}
+        for f in os.listdir(roof):
+            if not f.endswith(".json"):
+                continue
+            with open(os.path.join(roof, f)) as fh:
+                d = json.load(fh)
+            if d.get("status") == "ok":
+                n += 1
+                dom = d["roofline"]["dominant"]
+                doms[dom] = doms.get(dom, 0) + 1
+        rows.append(("roofline.pairs_ok", 0.0, f"{n}"))
+        for k, v in sorted(doms.items()):
+            rows.append((f"roofline.dominant.{k}", 0.0, f"{v}"))
+    return rows
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_tables
+    print("name,us_per_call,derived")
+    for group in (paper_tables.ALL, kernel_bench.ALL):
+        for fn in group:
+            for name, us, derived in fn():
+                print(f"{name},{us:.2f},{derived}")
+    for name, us, derived in _artifact_rows():
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Validation: the paper's analytical memory model vs XLA ground truth.
+
+For each (arch, shape) the dry-run compiled, compare:
+
+  * analytic state bytes  — repro.core.zero_memory under the ParallelConfig
+    equivalent of the mesh (TP=model axis, DP=data axis, EP=min(model, E),
+    ZeRO per the dry-run's --zero), params+optimizer (persistent inputs);
+  * XLA argument bytes    — compiled.memory_analysis().argument_size_in_bytes
+    minus the (analytically known) batch/cache input bytes;
+  * analytic activations  — stage_activation_bytes (AC policy as lowered)
+    vs XLA temp bytes (upper-bounded by temps: XLA temps also hold grads,
+    logits and transient buffers — reported as a ratio, not an equality).
+
+Writes benchmarks/artifacts/validation.json and prints a markdown table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+DRY = os.path.join(ART, "dryrun")
+GiB = 2 ** 30
+
+
+def _batch_input_bytes(arch: str, shape: str) -> int:
+    from repro.configs import get_spec
+    from repro.core.notation import FamilyKind
+    from repro.launch.specs import SHAPES
+    spec = get_spec(arch)
+    info = SHAPES[shape]
+    n = info["batch"] * (info["seq"] if info["kind"] != "decode" else 1) * 4
+    if spec.family == FamilyKind.VLM and info["kind"] != "decode":
+        n += info["batch"] * min(256, info["seq"] // 4) * spec.h * 2
+    if spec.encoder is not None and info["kind"] != "decode":
+        n += info["batch"] * spec.encoder.n_ctx * spec.h * 2
+    return n
+
+
+def _cache_bytes(arch: str, shape: str, n_chips: int) -> int:
+    """Per-device cache input bytes for decode shapes — exact: walks the
+    abstract cache and applies the SAME placement rule the dry-run sharded
+    with (launch.specs.cache_placement)."""
+    import jax
+    from repro.configs import get_spec
+    from repro.launch.specs import (SHAPES, cache_divisor, input_specs,
+                                    spec_for_shape)
+    from repro.models import build_model
+    spec = spec_for_shape(get_spec(arch), shape)
+    model = build_model(spec)
+    ins = input_specs(get_spec(arch), shape, model=model)
+    data_ax = n_chips // 16
+    total = 0
+    for leaf in jax.tree.leaves(ins["cache"]):
+        import math
+        n = math.prod(leaf.shape) if leaf.shape else 1
+        total += (n * leaf.dtype.itemsize
+                  // cache_divisor(leaf.shape, data_ax, 16))
+    return total
+
+
+def validate_one(arch: str, shape: str, mesh_tag: str = "pod16x16",
+                 zero: str = "os+g") -> Optional[Dict[str, Any]]:
+    from repro.configs import get_spec
+    from repro.core import estimate_memory, zero_memory
+    from repro.core.parallel_config import ZeROStage, RecomputePolicy
+    from repro.launch.specs import SHAPES
+
+    path = os.path.join(DRY, f"{arch}__{shape}__{mesh_tag}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return {"arch": arch, "shape": shape, "status": rec.get("status")}
+
+    spec = get_spec(arch)
+    info = SHAPES[shape]
+    n_chips = 512 if "2x16" in mesh_tag else 256
+    model_ax = 16
+    data_ax = n_chips // 16
+    ep = min(model_ax, spec.moe.n_routed) if spec.is_moe else 1
+    from repro.core.parallel_config import ParallelConfig
+    per_dev_batch = max(info["batch"] // data_ax, 1)
+    cfg = ParallelConfig(dp=data_ax, tp=model_ax, pp=1, ep=ep, etp=1,
+                         sp=True, zero=ZeROStage(zero),
+                         recompute=RecomputePolicy.NONE,
+                         micro_batch=per_dev_batch, seq_len=info["seq"])
+
+    state = zero_memory(spec, cfg)
+    if info["kind"] == "train":
+        analytic_args = state.params + state.optimizer
+    else:
+        analytic_args = state.params
+    xla_args = rec["memory"]["argument_size_in_bytes"]
+    io_bytes = _batch_input_bytes(arch, shape) // max(data_ax, 1)
+    if info["kind"] == "decode":
+        io_bytes += _cache_bytes(arch, shape, n_chips)   # already per-device
+    xla_state = max(xla_args - io_bytes, 1)
+
+    out = {
+        "arch": arch, "shape": shape, "status": "ok",
+        "analytic_state_bytes": int(analytic_args),
+        "xla_state_bytes": int(xla_state),
+        "state_ratio": analytic_args / xla_state,
+        "xla_temp_bytes": rec["memory"]["temp_size_in_bytes"],
+    }
+    if info["kind"] == "train":
+        from repro.core import stage_activation_bytes
+        act = stage_activation_bytes(spec, cfg)
+        # XLA temps also hold fp32 grads + logits + transients
+        grads = state.grads
+        logits = per_dev_batch * info["seq"] * spec.vocab * 4 // model_ax
+        out["analytic_act_bytes"] = int(act)
+        out["analytic_temp_floor"] = int(act + grads + logits)
+        out["temp_ratio"] = (act + grads + logits) / max(
+            rec["memory"]["temp_size_in_bytes"], 1)
+    return out
+
+
+def main():
+    from repro.configs import ASSIGNED
+    from repro.launch.specs import SHAPES
+    rows: List[Dict[str, Any]] = []
+    for a in ASSIGNED:
+        for s in SHAPES:
+            r = validate_one(a, s)
+            if r:
+                rows.append(r)
+    with open(os.path.join(ART, "validation.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    print("| arch | shape | analytic state | XLA state | ratio |"
+          " temp floor/XLA |")
+    print("|---|---|---|---|---|---|")
+    for r in ok:
+        tr = r.get("temp_ratio")
+        print(f"| {r['arch']} | {r['shape']} | "
+              f"{r['analytic_state_bytes']/GiB:.2f} GiB | "
+              f"{r['xla_state_bytes']/GiB:.2f} GiB | "
+              f"{r['state_ratio']:.2f} | "
+              + (f"{tr:.2f} |" if tr else "- |"))
+    ratios = [r["state_ratio"] for r in ok]
+    print(f"\nstate-bytes agreement: median {np.median(ratios):.3f}, "
+          f"[{min(ratios):.2f}, {max(ratios):.2f}] over {len(ok)} combos")
+
+
+if __name__ == "__main__":
+    main()

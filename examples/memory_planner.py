@@ -1,0 +1,57 @@
+"""Beyond-paper example: the memory model as a fleet-planning tool.
+
+For every assigned architecture, find the smallest world size and the
+cheapest (ZeRO, recompute, micro-batch) policy that trains seq=4096 within
+a 16 GiB/chip budget (v5e-class), and show what the paper's knobs buy.
+
+Run:  PYTHONPATH=src python examples/memory_planner.py
+"""
+
+import dataclasses
+
+from repro.configs import ASSIGNED, get_spec
+from repro.core import (ParallelConfig, RecomputePolicy, ZeROStage,
+                        estimate_memory, human_bytes, plan)
+
+HBM = 16 * 2**30     # v5e chip
+
+print(f"{'arch':<22}{'world':>6}  best feasible config")
+print("-" * 100)
+for arch in ASSIGNED:
+    spec = get_spec(arch)
+    found = None
+    for world in (8, 16, 32, 64, 128, 256, 512, 1024, 2048):
+        entries = plan(spec, world, HBM, seq_len=4096, top_k=1,
+                       micro_batches=(1, 2, 4))
+        if entries:
+            found = (world, entries[0])
+            break
+    if found:
+        w, e = found
+        print(f"{arch:<22}{w:>6}  {e.cfg.describe():<72} "
+              f"{human_bytes(e.estimate.total)}")
+    else:
+        print(f"{arch:<22}{'—':>6}  does not fit <=2048 chips at 16 GiB "
+              f"(needs more aggressive sharding)")
+
+print()
+print("Knob-by-knob walk for qwen3-moe-235b-a22b at world=512:")
+spec = get_spec("qwen3-moe-235b-a22b")
+base = ParallelConfig(dp=32, tp=4, pp=4, ep=16, etp=1, sp=True,
+                      micro_batch=1, seq_len=4096)
+steps = [
+    ("baseline (no ZeRO, AC none)", base),
+    ("+ ZeRO os", dataclasses.replace(base, zero=ZeROStage.OS)),
+    ("+ ZeRO os+g", dataclasses.replace(base, zero=ZeROStage.OS_G)),
+    ("+ ZeRO os+g+params",
+     dataclasses.replace(base, zero=ZeROStage.OS_G_PARAMS)),
+    ("+ AC selective", dataclasses.replace(
+        base, zero=ZeROStage.OS_G_PARAMS,
+        recompute=RecomputePolicy.SELECTIVE)),
+    ("+ AC full", dataclasses.replace(
+        base, zero=ZeROStage.OS_G_PARAMS, recompute=RecomputePolicy.FULL)),
+]
+for name, cfg in steps:
+    e = estimate_memory(spec, cfg)
+    fits = "fits 16GiB" if e.total <= HBM else "OVER"
+    print(f"  {name:<28} {human_bytes(e.total):>12}  ({fits})")

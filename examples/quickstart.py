@@ -1,0 +1,57 @@
+"""Quickstart: the paper's memory model in 60 seconds.
+
+Reproduces the paper's Tables 3/4/6/8/10 for DeepSeek-v3 under the official
+PP16@TP2@EP8 case study, then asks the beyond-paper planner a practical
+question: what is the cheapest coherent configuration that fits a 64 GiB
+device, and what does ZeRO buy?
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+
+from repro.configs import get_spec
+from repro.core import (PAPER_CONFIG, ParallelConfig, RecomputePolicy,
+                        ZeROStage, estimate_memory, human_bytes, plan)
+from repro.core.report import (render_full_estimate, render_table3,
+                               render_table4, render_table6, render_table8,
+                               render_table10)
+
+spec = get_spec("deepseek-v3")
+
+print("=" * 72)
+print("Table 3 — layer-level parameter counting")
+print(render_table3(spec))
+print()
+print("Table 4 — PP16 stage memory")
+print(render_table4(spec, pp=16))
+print()
+print("Table 6 — per-device static params @", PAPER_CONFIG.describe())
+print(render_table6(spec, PAPER_CONFIG))
+print()
+print("Table 8 — ZeRO strategies")
+print(render_table8(spec, PAPER_CONFIG))
+print()
+print("Table 10 — activation memory per 4-layer stage")
+print(render_table10(spec, PAPER_CONFIG))
+print()
+print("Full per-device estimate across ZeRO × recompute:")
+print(render_full_estimate(spec, PAPER_CONFIG))
+print()
+
+print("=" * 72)
+print("Beyond the paper: planner — cheapest config fitting 64 GiB/device")
+entries = plan(spec, world_size=1024, hbm_bytes=64 * 2**30, seq_len=4096,
+               top_k=5)
+for e in entries:
+    print(f"  {e.cfg.describe():<75} total={human_bytes(e.estimate.total)}")
+if not entries:
+    print("  (nothing fits at 64 GiB — try ZeRO os+g+params + AC full)")
+
+print()
+print("What does each ZeRO stage buy at the paper's config?")
+for z in ZeROStage:
+    c = dataclasses.replace(PAPER_CONFIG, zero=z,
+                            recompute=RecomputePolicy.FULL)
+    e = estimate_memory(spec, c)
+    print(f"  zero={z.value:<12} -> {human_bytes(e.total)} / device")

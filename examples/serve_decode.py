@@ -1,0 +1,45 @@
+"""Serving example: batched decode with the family-appropriate cache.
+
+Shows the MLA latent-cache advantage the paper's Table 2 geometry implies:
+per token, MLA caches d_c + d_hr = 576 values vs 2·n_kv·d_h = 32768 for
+equivalent MHA — a 57× KV-memory reduction, computed here with
+repro.core.kv_cache_bytes and then exercised with real batched decoding.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_spec
+from repro.core import ParallelConfig, human_bytes, kv_cache_bytes
+from repro.models import build_model
+from repro.serving import ServeConfig, serve_requests
+
+# --- analytical: KV-cache per device at decode_32k, paper's model vs MHA ---
+ds = get_spec("deepseek-v3")
+cfg = ParallelConfig(dp=1, tp=1, pp=1, micro_batch=128, seq_len=32768)
+mla_bytes = kv_cache_bytes(ds, cfg)
+import dataclasses
+from repro.core.notation import AttentionKind
+mha = dataclasses.replace(ds, attention=AttentionKind.MHA, mla=None)
+mha_bytes = kv_cache_bytes(mha, cfg)
+print("KV cache @ b=128, s=32768, 61 layers:")
+print(f"  MLA latent cache : {human_bytes(mla_bytes)}")
+print(f"  MHA full KV      : {human_bytes(mha_bytes)}")
+print(f"  reduction        : {mha_bytes / mla_bytes:.1f}x")
+print()
+
+# --- runtime: batched requests through three cache families ---
+for arch in ("deepseek-v3", "qwen2-1.5b", "rwkv6-1.6b"):
+    spec = get_spec(arch, smoke=True)
+    model = build_model(spec)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, spec.vocab)
+    out = serve_requests(model, params, prompts,
+                         ServeConfig(max_new_tokens=16, temperature=0.0),
+                         cache_len=64)
+    kind = ("MLA latent" if spec.attention == AttentionKind.MLA else
+            ("SSM state (O(1) in context)" if spec.attn_free else "GQA KV"))
+    print(f"{arch:<14} cache={kind:<28} generated shape={tuple(out.shape)} "
+          f"first row={out[0, :8].tolist()}")

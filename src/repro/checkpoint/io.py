@@ -1,0 +1,75 @@
+"""Checkpointing: flat-key npz snapshots of arbitrary pytrees.
+
+Layout: <dir>/step_<n>/state.npz + manifest.json (treedef + dtypes).  On a
+real multi-host pod each host writes its addressable shards
+(``process_index`` suffix); in this single-process environment that
+degenerates to one file, but the API keeps the shard dimension explicit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+def save(directory: str, step: int, tree: PyTree) -> str:
+    d = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    flat, _ = _flatten(tree)
+    shard = jax.process_index()
+    path = os.path.join(d, f"state_{shard:03d}.npz")
+    # npz can't hold ml_dtypes (bf16 etc.) — store them as a uint16 view;
+    # the manifest records the true dtype for restore.
+    storable = {k: (v.view(np.uint16) if v.dtype.kind == "V" or
+                    v.dtype.name == "bfloat16" else v)
+                for k, v in flat.items()}
+    np.savez(path, **storable)
+    manifest = {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                for k, v in flat.items()}
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump({"step": step, "leaves": manifest}, f, indent=1)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for n in os.listdir(directory)
+             if (m := re.match(r"step_(\d+)$", n))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (validates shapes/dtypes)."""
+    d = os.path.join(directory, f"step_{step:08d}")
+    shard = jax.process_index()
+    data = np.load(os.path.join(d, f"state_{shard:03d}.npz"))
+    flat, treedef = _flatten(like)
+    leaves = []
+    for key, ref_leaf in flat.items():
+        arr = data[key]
+        assert arr.shape == ref_leaf.shape, (key, arr.shape, ref_leaf.shape)
+        if ref_leaf.dtype.name == "bfloat16" and arr.dtype == np.uint16:
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        leaves.append(jnp.asarray(arr, dtype=ref_leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

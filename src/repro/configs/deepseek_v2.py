@@ -1,0 +1,44 @@
+"""DeepSeek-V2 [arXiv:2405.04434] — 236B total / 21B active.
+
+60 layers, h=5120, MLA (d_c=512, d_cq=1536), 160 routed experts top-6 +
+2 shared (h_E=1536), first layer dense (h_F=12288), vocab 102400.
+"""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MLASpec, MlpKind,
+                                 MoESpec, ModelSpec)
+
+SPEC = ModelSpec(
+    name="deepseek-v2",
+    family=FamilyKind.MOE,
+    n_layers=60,
+    h=5120,
+    n_h=128,
+    n_kv=128,
+    d_head=128,
+    h_ff=12288,
+    vocab=102400,
+    attention=AttentionKind.MLA,
+    mlp=MlpKind.SWIGLU,
+    mla=MLASpec(d_cq=1536, d_c=512, d_h=128, d_hr=64, d_v=128),
+    moe=MoESpec(n_routed=160, n_active=6, n_shared=2, d_ff_expert=1536,
+                first_k_dense=1),
+    max_seq_len=4096,
+)
+
+SMOKE = ModelSpec(
+    name="deepseek-v2-smoke",
+    family=FamilyKind.MOE,
+    n_layers=2,
+    h=256,
+    n_h=4,
+    n_kv=4,
+    d_head=32,
+    h_ff=512,
+    vocab=512,
+    attention=AttentionKind.MLA,
+    mlp=MlpKind.SWIGLU,
+    mla=MLASpec(d_cq=96, d_c=64, d_h=32, d_hr=16, d_v=32),
+    moe=MoESpec(n_routed=4, n_active=2, n_shared=2, d_ff_expert=128,
+                first_k_dense=1),
+    max_seq_len=512,
+)

@@ -1,0 +1,38 @@
+"""Gemma-2B [arXiv:2403.08295] — 18L d_model=2048 8H MQA (kv=1) d_ff=16384
+GeGLU, head_dim=256, vocab=256000, tied embeddings, (1+scale) RMSNorm,
+sqrt(h)-scaled embeddings."""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind,
+                                 ModelSpec)
+
+SPEC = ModelSpec(
+    name="gemma-2b",
+    family=FamilyKind.DENSE,
+    n_layers=18,
+    h=2048,
+    n_h=8,
+    n_kv=1,
+    d_head=256,
+    h_ff=16384,
+    vocab=256000,
+    attention=AttentionKind.MQA,
+    mlp=MlpKind.GEGLU,
+    tie_embeddings=True,
+    max_seq_len=8192,
+)
+
+SMOKE = ModelSpec(
+    name="gemma-2b-smoke",
+    family=FamilyKind.DENSE,
+    n_layers=2,
+    h=256,
+    n_h=4,
+    n_kv=1,
+    d_head=64,
+    h_ff=512,
+    vocab=512,
+    attention=AttentionKind.MQA,
+    mlp=MlpKind.GEGLU,
+    tie_embeddings=True,
+    max_seq_len=512,
+)

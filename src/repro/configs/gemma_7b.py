@@ -1,0 +1,37 @@
+"""Gemma-7B [arXiv:2403.08295] — 28L d_model=3072 16H (GQA kv=16, i.e. MHA)
+d_ff=24576 GeGLU, head_dim=256, vocab=256000, tied embeddings."""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind,
+                                 ModelSpec)
+
+SPEC = ModelSpec(
+    name="gemma-7b",
+    family=FamilyKind.DENSE,
+    n_layers=28,
+    h=3072,
+    n_h=16,
+    n_kv=16,
+    d_head=256,
+    h_ff=24576,
+    vocab=256000,
+    attention=AttentionKind.MHA,
+    mlp=MlpKind.GEGLU,
+    tie_embeddings=True,
+    max_seq_len=8192,
+)
+
+SMOKE = ModelSpec(
+    name="gemma-7b-smoke",
+    family=FamilyKind.DENSE,
+    n_layers=2,
+    h=256,
+    n_h=4,
+    n_kv=4,
+    d_head=64,
+    h_ff=512,
+    vocab=512,
+    attention=AttentionKind.MHA,
+    mlp=MlpKind.GEGLU,
+    tie_embeddings=True,
+    max_seq_len=512,
+)

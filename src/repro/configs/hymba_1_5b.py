@@ -1,0 +1,39 @@
+"""Hymba-1.5B [arXiv:2411.13676] — hybrid-head architecture:
+32L d_model=1600 25H (GQA kv=5, head_dim 64) d_ff=5504 vocab=32001,
+ssm_state=16.  Attention and SSM (mamba-flavoured) heads run IN PARALLEL in
+every layer; outputs are normalised and averaged (merge_norm)."""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind,
+                                 ModelSpec, SSMSpec)
+
+SPEC = ModelSpec(
+    name="hymba-1.5b",
+    family=FamilyKind.HYBRID,
+    n_layers=32,
+    h=1600,
+    n_h=25,
+    n_kv=5,
+    d_head=64,
+    h_ff=5504,
+    vocab=32001,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.SWIGLU,
+    ssm=SSMSpec(state_dim=16, n_ssm_heads=25, ssm_expand=1),
+    max_seq_len=8192,
+)
+
+SMOKE = ModelSpec(
+    name="hymba-smoke",
+    family=FamilyKind.HYBRID,
+    n_layers=2,
+    h=256,
+    n_h=4,
+    n_kv=2,
+    d_head=64,
+    h_ff=512,
+    vocab=512,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.SWIGLU,
+    ssm=SSMSpec(state_dim=16, n_ssm_heads=4, ssm_expand=1),
+    max_seq_len=512,
+)

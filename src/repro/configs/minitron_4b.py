@@ -1,0 +1,37 @@
+"""Minitron-4B [arXiv:2407.14679] — pruned Nemotron-4:
+32L d_model=3072 24H (GQA kv=8) d_ff=9216 vocab=256000.
+Nemotron uses squared-ReLU 2-matrix MLP; modelled as the 2-matrix GELU kind
+(same parameter/activation geometry)."""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind,
+                                 ModelSpec)
+
+SPEC = ModelSpec(
+    name="minitron-4b",
+    family=FamilyKind.DENSE,
+    n_layers=32,
+    h=3072,
+    n_h=24,
+    n_kv=8,
+    d_head=128,
+    h_ff=9216,
+    vocab=256000,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.GELU,
+    max_seq_len=4096,
+)
+
+SMOKE = ModelSpec(
+    name="minitron-smoke",
+    family=FamilyKind.DENSE,
+    n_layers=2,
+    h=256,
+    n_h=8,
+    n_kv=4,
+    d_head=32,
+    h_ff=512,
+    vocab=512,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.GELU,
+    max_seq_len=512,
+)

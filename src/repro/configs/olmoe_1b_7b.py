@@ -1,0 +1,40 @@
+"""OLMoE-1B-7B [arXiv:2409.02060] — 16L d_model=2048 16H (GQA kv=16)
+expert d_ff=1024, vocab 50304; MoE 64 experts top-8, no shared experts,
+every layer MoE (no dense FFN layers)."""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind, MoESpec,
+                                 ModelSpec)
+
+SPEC = ModelSpec(
+    name="olmoe-1b-7b",
+    family=FamilyKind.MOE,
+    n_layers=16,
+    h=2048,
+    n_h=16,
+    n_kv=16,
+    d_head=128,
+    h_ff=0,                      # all layers are MoE
+    vocab=50304,
+    attention=AttentionKind.MHA,
+    mlp=MlpKind.SWIGLU,
+    moe=MoESpec(n_routed=64, n_active=8, n_shared=0, d_ff_expert=1024,
+                first_k_dense=0),
+    max_seq_len=4096,
+)
+
+SMOKE = ModelSpec(
+    name="olmoe-smoke",
+    family=FamilyKind.MOE,
+    n_layers=2,
+    h=256,
+    n_h=4,
+    n_kv=4,
+    d_head=64,
+    h_ff=0,
+    vocab=512,
+    attention=AttentionKind.MHA,
+    mlp=MlpKind.SWIGLU,
+    moe=MoESpec(n_routed=4, n_active=2, n_shared=0, d_ff_expert=128,
+                first_k_dense=0),
+    max_seq_len=512,
+)

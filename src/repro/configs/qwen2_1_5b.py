@@ -1,0 +1,40 @@
+"""Qwen2-1.5B [arXiv:2407.10671] — 28L d_model=1536 12H (GQA kv=2)
+d_ff=8960 vocab=151936, QKV bias, tied embeddings."""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind,
+                                 ModelSpec)
+
+SPEC = ModelSpec(
+    name="qwen2-1.5b",
+    family=FamilyKind.DENSE,
+    n_layers=28,
+    h=1536,
+    n_h=12,
+    n_kv=2,
+    d_head=128,
+    h_ff=8960,
+    vocab=151936,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.SWIGLU,
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1e6,
+    max_seq_len=32768,
+)
+
+SMOKE = ModelSpec(
+    name="qwen2-smoke",
+    family=FamilyKind.DENSE,
+    n_layers=2,
+    h=256,
+    n_h=4,
+    n_kv=2,
+    d_head=64,
+    h_ff=512,
+    vocab=512,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.SWIGLU,
+    qkv_bias=True,
+    tie_embeddings=True,
+    max_seq_len=512,
+)

@@ -1,0 +1,40 @@
+"""Qwen2-VL-72B [arXiv:2409.12191] — VLM decoder backbone:
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064, QKV bias,
+M-RoPE (reduces to 1-D RoPE under the stubbed vision frontend — DESIGN.md §4).
+Vision tower (ViT-675M) is a stub: input_specs supplies patch embeddings."""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind,
+                                 ModelSpec)
+
+SPEC = ModelSpec(
+    name="qwen2-vl-72b",
+    family=FamilyKind.VLM,
+    n_layers=80,
+    h=8192,
+    n_h=64,
+    n_kv=8,
+    d_head=128,
+    h_ff=29568,
+    vocab=152064,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.SWIGLU,
+    qkv_bias=True,
+    rope_theta=1e6,
+    max_seq_len=32768,
+)
+
+SMOKE = ModelSpec(
+    name="qwen2-vl-smoke",
+    family=FamilyKind.VLM,
+    n_layers=2,
+    h=256,
+    n_h=8,
+    n_kv=2,
+    d_head=32,
+    h_ff=512,
+    vocab=512,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.SWIGLU,
+    qkv_bias=True,
+    max_seq_len=512,
+)

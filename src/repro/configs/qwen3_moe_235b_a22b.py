@@ -1,0 +1,41 @@
+"""Qwen3-MoE-235B-A22B [hf:Qwen/Qwen3-30B-A3B family] — 94L d_model=4096
+64H (GQA kv=4) expert d_ff=1536 vocab=151936; MoE 128 experts top-8, no
+shared experts, every layer MoE."""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind, MoESpec,
+                                 ModelSpec)
+
+SPEC = ModelSpec(
+    name="qwen3-moe-235b-a22b",
+    family=FamilyKind.MOE,
+    n_layers=94,
+    h=4096,
+    n_h=64,
+    n_kv=4,
+    d_head=128,
+    h_ff=0,                      # all layers MoE
+    vocab=151936,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.SWIGLU,
+    moe=MoESpec(n_routed=128, n_active=8, n_shared=0, d_ff_expert=1536,
+                first_k_dense=0),
+    rope_theta=1e6,
+    max_seq_len=32768,
+)
+
+SMOKE = ModelSpec(
+    name="qwen3-moe-smoke",
+    family=FamilyKind.MOE,
+    n_layers=2,
+    h=256,
+    n_h=8,
+    n_kv=2,
+    d_head=32,
+    h_ff=0,
+    vocab=512,
+    attention=AttentionKind.GQA,
+    mlp=MlpKind.SWIGLU,
+    moe=MoESpec(n_routed=4, n_active=2, n_shared=0, d_ff_expert=128,
+                first_k_dense=0),
+    max_seq_len=512,
+)

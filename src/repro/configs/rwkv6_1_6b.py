@@ -1,0 +1,40 @@
+"""RWKV6-1.6B "Finch" [arXiv:2404.05892] — attention-free SSM:
+24L d_model=2048, channel-mix d_ff=7168, vocab=65536; 32 recurrent heads of
+64 with data-dependent decay.  Channel-mix modelled as the 2-matrix MLP kind
+(receptance gating folded into the time-mix g gate — DESIGN.md §7).
+Runs long_500k natively: O(1)-in-context recurrent state."""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind,
+                                 ModelSpec, SSMSpec)
+
+SPEC = ModelSpec(
+    name="rwkv6-1.6b",
+    family=FamilyKind.SSM,
+    n_layers=24,
+    h=2048,
+    n_h=32,          # recurrent heads (no attention)
+    n_kv=32,
+    d_head=64,
+    h_ff=7168,
+    vocab=65536,
+    attention=AttentionKind.NONE,
+    mlp=MlpKind.GELU,
+    ssm=SSMSpec(state_dim=64, n_ssm_heads=32, ssm_expand=1),
+    max_seq_len=1 << 20,
+)
+
+SMOKE = ModelSpec(
+    name="rwkv6-smoke",
+    family=FamilyKind.SSM,
+    n_layers=2,
+    h=256,
+    n_h=4,
+    n_kv=4,
+    d_head=64,
+    h_ff=512,
+    vocab=512,
+    attention=AttentionKind.NONE,
+    mlp=MlpKind.GELU,
+    ssm=SSMSpec(state_dim=64, n_ssm_heads=4, ssm_expand=1),
+    max_seq_len=512,
+)

@@ -1,0 +1,42 @@
+"""Whisper-tiny [arXiv:2212.04356] — encoder-decoder:
+4L decoder (+4L encoder, n_ctx=1500) d_model=384 6H d_ff=1536 vocab=51865,
+GELU MLP, tied decoder embeddings.  The mel-spectrogram + conv frontend is a
+STUB: input_specs supplies precomputed frame embeddings (carve-out per task).
+"""
+
+from repro.core.notation import (AttentionKind, EncoderSpec, FamilyKind,
+                                 MlpKind, ModelSpec)
+
+SPEC = ModelSpec(
+    name="whisper-tiny",
+    family=FamilyKind.AUDIO,
+    n_layers=4,
+    h=384,
+    n_h=6,
+    n_kv=6,
+    d_head=64,
+    h_ff=1536,
+    vocab=51865,
+    attention=AttentionKind.MHA,
+    mlp=MlpKind.GELU,
+    encoder=EncoderSpec(n_layers=4, n_ctx=1500),
+    tie_embeddings=True,
+    max_seq_len=448,
+)
+
+SMOKE = ModelSpec(
+    name="whisper-smoke",
+    family=FamilyKind.AUDIO,
+    n_layers=2,
+    h=128,
+    n_h=4,
+    n_kv=4,
+    d_head=32,
+    h_ff=256,
+    vocab=512,
+    attention=AttentionKind.MHA,
+    mlp=MlpKind.GELU,
+    encoder=EncoderSpec(n_layers=2, n_ctx=64),
+    tie_embeddings=True,
+    max_seq_len=128,
+)

@@ -1,0 +1,30 @@
+"""``repro.core`` — the paper's contribution: an analytical device-level
+memory model for distributed MoE/dense/SSM training (params, ZeRO states,
+activations, buffers) plus a configuration planner built on it."""
+
+from .activations import (layer_activation_bytes, moe_activation_bytes,
+                          mla_activation_bytes, stage_activation_bytes, table10)
+from .memory_model import MemoryEstimate, estimate_memory, fits, kv_cache_bytes
+from .notation import (AttentionKind, EncoderSpec, FamilyKind, MLASpec,
+                       MlpKind, MoESpec, ModelSpec, SSMSpec, human_bytes,
+                       human_count)
+from .parallel_config import (BF16_POLICY, FP8_POLICY, PAPER_CONFIG,
+                              DTypePolicy, ParallelConfig, RecomputePolicy,
+                              ZeROStage)
+from .params import (DeviceParams, device_params, max_stage, table3_rows,
+                     table4_stages, total_params_paper)
+from .planner import enumerate_configs, min_memory_config, plan
+from .zero import TrainStateBytes, zero_memory, zero_table
+
+__all__ = [
+    "AttentionKind", "BF16_POLICY", "DTypePolicy", "DeviceParams",
+    "EncoderSpec", "FP8_POLICY", "FamilyKind", "MLASpec", "MemoryEstimate",
+    "MlpKind", "MoESpec", "ModelSpec", "PAPER_CONFIG", "ParallelConfig",
+    "RecomputePolicy", "SSMSpec", "TrainStateBytes", "ZeROStage",
+    "device_params", "enumerate_configs", "estimate_memory", "fits",
+    "human_bytes", "human_count", "kv_cache_bytes", "layer_activation_bytes",
+    "max_stage", "min_memory_config", "mla_activation_bytes",
+    "moe_activation_bytes", "plan", "stage_activation_bytes", "table10",
+    "table3_rows", "table4_stages", "total_params_paper", "zero_memory",
+    "zero_table",
+]

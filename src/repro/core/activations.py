@@ -1,0 +1,232 @@
+"""Activation-memory model (paper §5, Table 10) + extensions.
+
+The paper derives per-layer activation bytes for the MLA and MoE blocks of
+DeepSeek-v3 under TP2@SP2@CP1 with recomputation None / Full.  We implement
+those formulas symbolically in (b, s, tp, sp, cp, ep, etp) so they reproduce
+Table 10 exactly at the paper's settings, and extend the same accounting
+discipline to the other assigned families (GQA/MQA attention, dense
+SwiGLU/GeGLU/GELU MLPs, RWKV6 recurrence, hybrid layers, enc-dec).
+
+Conventions (paper §5):
+* bf16 activations → 2 bytes/value; masks/probabilities counted at the
+  byte width the paper uses (5 b n_h s² = 2+2+1: scores, softmax, mask).
+* SP divides sequence-resident tensors outside the TP regions; TP divides
+  head/channel-sharded tensors; CP divides the sequence everywhere.
+* MoE expert-side tensors use the balanced-routing estimate
+  E_token = b·s·N_r / N  (paper §5.2), with N/EP local experts per rank and
+  shared experts processing the full b·s tokens.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .notation import AttentionKind, FamilyKind, MlpKind, ModelSpec
+from .parallel_config import ParallelConfig, RecomputePolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class ActivationBreakdown:
+    attn: int          # MLA / GQA attention block
+    mlp: int           # dense-MLP or MoE block (incl. router)
+    ssm: int           # recurrent path
+    per_layer: int     # attn + mlp + ssm (one layer)
+
+    def scaled(self, n_layers: int) -> int:
+        return self.per_layer * n_layers
+
+
+# ---------------------------------------------------------------------------
+# MLA (paper §5.1)
+# ---------------------------------------------------------------------------
+
+def mla_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
+                         cp: int, recompute: RecomputePolicy) -> int:
+    """One layer of MLA activations (bytes).
+
+    AC None (paper, TP@SP):
+      M1 = 4bsh/sp + 2bs(d_cq+d_c) + 4bs(d_h+d_hr)n_h/tp + 2bs d_h n_h/tp
+           + 5 b n_h s^2/tp + 2bs d_h n_h/tp + bsh/sp
+    The 2bs(d_cq+d_c) latent tensors are NOT divided by sp because the down
+    projections are replicated (paper).  AC Full: 2bsh/sp.
+    """
+    if spec.attention == AttentionKind.NONE:
+        return 0
+    m = spec.mla
+    s = s // cp
+    if recompute == RecomputePolicy.FULL:
+        return 2 * b * s * spec.h // sp
+    scores = 5 * b * spec.n_h * s * s // tp
+    none_total = (
+        4 * b * s * spec.h // sp
+        + 2 * b * s * (m.d_cq + m.d_c)
+        + 4 * b * s * (m.d_h + m.d_hr) * spec.n_h // tp
+        + 2 * b * s * m.d_v * spec.n_h // tp
+        + scores
+        + 2 * b * s * m.d_v * spec.n_h // tp
+        + b * s * spec.h // sp
+    )
+    if recompute == RecomputePolicy.SELECTIVE:
+        # selective = drop the O(s^2) score/softmax/mask tensors (flash-style)
+        return none_total - scores
+    return none_total
+
+
+# ---------------------------------------------------------------------------
+# MoE linear (paper §5.2)
+# ---------------------------------------------------------------------------
+
+def moe_activation_bytes(spec: ModelSpec, b: int, s: int, *, sp: int, cp: int,
+                         ep: int, recompute: RecomputePolicy) -> int:
+    """One MoE layer's activations (bytes), paper §5.2.
+
+    AC None (SP@EP@ETP1):
+      M1 = 4bsh/sp + 4bsN + 2bsN_r
+           + n_local * (3 E_token h + 8 E_token h_E)
+           + N_s * (3bsh + 8bs h_E)
+    AC Full: bsh + 2 b s N_r  (input + router outputs kept).
+    """
+    e = spec.moe
+    s = s // cp
+    if recompute == RecomputePolicy.FULL:
+        return b * s * spec.h + 2 * b * s * e.n_active
+    n_local = e.n_routed // ep
+    e_token = b * s * e.n_active / e.n_routed
+    routed = n_local * (3 * e_token * spec.h + 8 * e_token * e.d_ff_expert)
+    shared = e.n_shared * (3 * b * s * spec.h + 8 * b * s * e.d_ff_expert)
+    total = (4 * b * s * spec.h // sp
+             + 4 * b * s * e.n_routed
+             + 2 * b * s * e.n_active
+             + int(routed) + shared)
+    if recompute == RecomputePolicy.SELECTIVE:
+        # recompute expert FFN internals, keep dispatch/router/output
+        total -= int(routed) + shared
+        total += int(n_local * 2 * e_token * spec.h) + e.n_shared * 2 * b * s * spec.h
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Extensions: GQA attention, dense MLP, SSM (same accounting discipline)
+# ---------------------------------------------------------------------------
+
+def gqa_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
+                         cp: int, recompute: RecomputePolicy) -> int:
+    """Standard MHA/GQA/MQA attention block, naive-softmax accounting to
+    mirror the paper's 5 b n_h s² convention."""
+    s = s // cp
+    if recompute == RecomputePolicy.FULL:
+        return 2 * b * s * spec.h // sp
+    d = spec.d_head
+    kv_shard = min(tp, spec.n_kv)
+    scores = 5 * b * spec.n_h * s * s // tp
+    total = (
+        2 * b * s * spec.h // sp                      # norm output (QKV input)
+        + 2 * b * s * spec.n_h * d // tp              # Q
+        + 2 * 2 * b * s * spec.n_kv * d // kv_shard   # K, V
+        + scores
+        + 2 * b * s * spec.n_h * d // tp              # attn context
+        + b * s * spec.h // sp                        # o-proj output grad buffer
+    )
+    if recompute == RecomputePolicy.SELECTIVE:
+        total -= scores
+    return total
+
+
+def dense_mlp_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int,
+                               sp: int, cp: int,
+                               recompute: RecomputePolicy) -> int:
+    s = s // cp
+    if recompute == RecomputePolicy.FULL:
+        return 2 * b * s * spec.h // sp
+    inp = 2 * b * s * spec.h // sp
+    if spec.mlp in (MlpKind.SWIGLU, MlpKind.GEGLU):
+        hidden = 3 * 2 * b * s * spec.h_ff // tp      # gate, up, gated product
+    else:
+        hidden = 2 * 2 * b * s * spec.h_ff // tp      # fc1 out, act out
+    return inp + hidden
+
+
+def ssm_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
+                         cp: int, recompute: RecomputePolicy) -> int:
+    """RWKV6/Mamba-style recurrent block.  The O(1)-in-s state is b·n_h·d·d;
+    training stores the r/k/v/g/w projections (O(s)) unless recomputed."""
+    if spec.ssm is None:
+        return 0
+    ss = spec.ssm
+    s = s // cp
+    d = spec.h * ss.ssm_expand
+    state = 2 * b * ss.n_ssm_heads * (d // max(ss.n_ssm_heads, 1)) * ss.state_dim
+    if recompute == RecomputePolicy.FULL:
+        return 2 * b * s * spec.h // sp + state
+    proj = 5 * 2 * b * s * d // tp                    # r,k,v,g,w trajectories
+    out = 2 * b * s * d // tp
+    total = 2 * b * s * spec.h // sp + proj + out + state
+    if recompute == RecomputePolicy.SELECTIVE:
+        total -= out  # recompute the scan output from saved projections
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Per-layer / per-device composition
+# ---------------------------------------------------------------------------
+
+def layer_activation_bytes(spec: ModelSpec, cfg: ParallelConfig,
+                           layer_idx: int) -> ActivationBreakdown:
+    b, s = cfg.micro_batch, cfg.seq_len
+    kw = dict(tp=cfg.tp, sp=cfg.sp_degree, cp=cfg.cp, recompute=cfg.recompute)
+    attn = 0
+    if spec.attention == AttentionKind.MLA:
+        attn = mla_activation_bytes(spec, b, s, **kw)
+    elif spec.attention != AttentionKind.NONE:
+        attn = gqa_activation_bytes(spec, b, s, **kw)
+    ssm = ssm_activation_bytes(spec, b, s, **kw)
+    if spec.is_moe and layer_idx in spec.moe_layer_indices():
+        mlp = moe_activation_bytes(spec, b, s, sp=cfg.sp_degree, cp=cfg.cp,
+                                   ep=cfg.ep, recompute=cfg.recompute)
+    else:
+        mlp = dense_mlp_activation_bytes(spec, b, s, **kw)
+    return ActivationBreakdown(attn=attn, mlp=mlp, ssm=ssm,
+                               per_layer=attn + mlp + ssm)
+
+
+def stage_activation_bytes(spec: ModelSpec, cfg: ParallelConfig,
+                           stage: int = None, in_flight: int = None) -> int:
+    """Activation bytes held per device for one PP stage.
+
+    ``in_flight`` microbatches are resident under 1F1B (stage_id-dependent,
+    worst case = pp); default 1 reproduces the paper's single-microbatch
+    Table 10 view.
+    """
+    from .params import table4_stages  # local import to avoid cycle
+    stages = table4_stages(spec, cfg.pp)
+    if stage is None:
+        interior = [r for r in stages if 0 not in r.layers
+                    and (spec.n_layers - 1) not in r.layers]
+        row = max(interior or stages, key=lambda r: r.params)
+    else:
+        row = stages[stage]
+    frac = cfg.recompute_fraction if cfg.recompute != RecomputePolicy.NONE \
+        else 0.0
+    n_rc = int(round(frac * len(row.layers)))
+    no_rc = dataclasses.replace(cfg, recompute=RecomputePolicy.NONE)
+    total = 0
+    for i, l in enumerate(row.layers):
+        c = cfg if i < n_rc else no_rc
+        total += layer_activation_bytes(spec, c, l).per_layer
+    return total * (in_flight or 1)
+
+
+def table10(spec: ModelSpec, cfg: ParallelConfig) -> Dict[str, Dict[str, int]]:
+    """Paper Table 10: MLA / MoE / total per 4-layer stage, AC None vs Full."""
+    out: Dict[str, Dict[str, int]] = {}
+    for policy in (RecomputePolicy.NONE, RecomputePolicy.FULL):
+        c = dataclasses.replace(cfg, recompute=policy)
+        b, s = c.micro_batch, c.seq_len
+        kw = dict(tp=c.tp, sp=c.sp_degree, cp=c.cp, recompute=policy)
+        mla = mla_activation_bytes(spec, b, s, **kw)
+        moe = moe_activation_bytes(spec, b, s, sp=c.sp_degree, cp=c.cp,
+                                   ep=c.ep, recompute=policy)
+        out[policy.value] = {"MLA": 4 * mla, "MoE": 4 * moe,
+                             "Total": 4 * (mla + moe)}
+    return out

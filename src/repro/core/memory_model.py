@@ -1,0 +1,110 @@
+"""Full per-device training-memory estimate (the paper's end product).
+
+Composes §2-§6: static parameters, gradients, optimizer states (with ZeRO
+and the DP/EDP split), activations (with recomputation policy and PP
+in-flight microbatches), temporary communication buffers, and a
+fragmentation factor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from .activations import stage_activation_bytes
+from .notation import ModelSpec, human_bytes
+from .params import device_params
+from .parallel_config import ParallelConfig
+from .zero import zero_memory
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryEstimate:
+    params: int
+    grads: int
+    optimizer: int
+    activations: int
+    comm_buffers: int
+    fragmentation: int
+
+    @property
+    def state_total(self) -> int:
+        return self.params + self.grads + self.optimizer
+
+    @property
+    def total(self) -> int:
+        return (self.state_total + self.activations
+                + self.comm_buffers + self.fragmentation)
+
+    def breakdown(self) -> Dict[str, int]:
+        return {
+            "params": self.params,
+            "grads": self.grads,
+            "optimizer": self.optimizer,
+            "activations": self.activations,
+            "comm_buffers": self.comm_buffers,
+            "fragmentation": self.fragmentation,
+            "total": self.total,
+        }
+
+    def pretty(self) -> str:
+        rows = [f"  {k:<14} {human_bytes(v):>12}" for k, v in self.breakdown().items()]
+        return "\n".join(rows)
+
+
+def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
+                    stage: Optional[int] = None,
+                    in_flight_microbatches: Optional[int] = None,
+                    training: bool = True) -> MemoryEstimate:
+    """Per-device memory estimate for one PP stage.
+
+    ``training=False`` models inference/serving: no grads/optimizer, and the
+    'activations' term is the KV-cache / recurrent-state working set.
+    """
+    state = zero_memory(spec, cfg, stage=stage)
+    if not training:
+        dev = device_params(spec, cfg, stage=stage)
+        params = dev.total * cfg.dtype.weights
+        acts = kv_cache_bytes(spec, cfg)
+        grads = opt = 0
+    else:
+        params, grads, opt = state.params, state.grads, state.optimizer
+        acts = stage_activation_bytes(spec, cfg, stage=stage,
+                                      in_flight=in_flight_microbatches)
+    subtotal = params + grads + opt + acts + cfg.comm_buffer_bytes
+    frag = int(subtotal * cfg.fragmentation)
+    return MemoryEstimate(params=params, grads=grads, optimizer=opt,
+                          activations=acts, comm_buffers=cfg.comm_buffer_bytes,
+                          fragmentation=frag)
+
+
+def kv_cache_bytes(spec: ModelSpec, cfg: ParallelConfig,
+                   batch: Optional[int] = None,
+                   seq: Optional[int] = None) -> int:
+    """Decode-time cache per device: MLA caches the compressed latent
+    (d_c + d_hr per token — the MLA inference advantage), GQA caches
+    2·n_kv·d_head, SSM keeps O(1) state, sliding-window caps s at the window."""
+    from .notation import AttentionKind
+    b = batch if batch is not None else cfg.micro_batch
+    s = seq if seq is not None else cfg.seq_len
+    act = cfg.dtype.activation
+    n_layers_local = max(1, spec.n_layers // cfg.pp)
+    per_tok = 0
+    if spec.attention == AttentionKind.MLA:
+        per_tok = spec.mla.d_c + spec.mla.d_hr
+    elif spec.attention != AttentionKind.NONE:
+        kv_shard = min(cfg.tp, spec.n_kv)
+        per_tok = 2 * spec.n_kv * spec.d_head // kv_shard
+    s_eff = min(s, spec.sliding_window) if spec.sliding_window else s
+    cache = b * s_eff * per_tok * act * n_layers_local
+    if spec.ssm is not None:
+        ss = spec.ssm
+        d = spec.h * ss.ssm_expand
+        head_dim = d // max(ss.n_ssm_heads, 1)
+        cache += (b * ss.n_ssm_heads * head_dim * ss.state_dim * act
+                  * n_layers_local)
+    return cache
+
+
+def fits(spec: ModelSpec, cfg: ParallelConfig, hbm_bytes: int, **kw) -> bool:
+    return estimate_memory(spec, cfg, **kw).total <= hbm_bytes

@@ -1,0 +1,112 @@
+"""Distributed-training configuration (paper Table 5) and validation.
+
+The paper's notation:
+  DP  data parallelism (non-expert params' gradient-sync group)
+  TP  tensor parallelism (Megatron column/row split of attention & dense MLP)
+  PP  pipeline parallelism (layer stages)
+  EP  expert parallelism (routed experts distributed across ranks)
+  ETP expert tensor parallelism (TP inside an expert)
+  EDP expert data parallelism (derived: world / (PP*EP*ETP))
+  SP  sequence parallelism (Megatron-style, tied to TP degree)
+  CP  context parallelism
+World size = DP * TP * PP, and DP * TP = EDP * EP * ETP must hold so the
+expert and non-expert groups tile the same set of devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+
+class ZeROStage(enum.Enum):
+    NONE = "none"
+    OS = "os"                    # shard optimizer states over DP/EDP
+    OS_G = "os+g"                # + gradients
+    OS_G_PARAMS = "os+g+params"  # + parameters (ZeRO-3)
+
+
+class RecomputePolicy(enum.Enum):
+    NONE = "none"          # store all intermediate activations
+    FULL = "full"          # store only per-block inputs (paper: 2bsh/SP per norm pair)
+    SELECTIVE = "selective"  # store all but attention-score/softmax & expert ffn internals
+
+
+@dataclasses.dataclass(frozen=True)
+class DTypePolicy:
+    """Bytes per parameter/value (paper Table 7)."""
+
+    weights: int = 2          # BF16
+    activation: int = 2       # BF16
+    gradient: int = 4         # FP32
+    opt_master: int = 4       # FP32 copy of params
+    opt_momentum: int = 2     # BF16
+    opt_variance: int = 2     # BF16
+
+    @property
+    def optimizer(self) -> int:
+        return self.opt_master + self.opt_momentum + self.opt_variance
+
+
+BF16_POLICY = DTypePolicy()
+# Beyond-paper extension: FP8 weights with BF16 master-ish accumulation.
+FP8_POLICY = DTypePolicy(weights=1, activation=1, gradient=4,
+                         opt_master=4, opt_momentum=2, opt_variance=2)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    dp: int = 1
+    tp: int = 1
+    pp: int = 1
+    ep: int = 1
+    etp: int = 1
+    cp: int = 1
+    sp: bool = False                     # Megatron SP: degree == tp when on
+    zero: ZeROStage = ZeROStage.NONE
+    recompute: RecomputePolicy = RecomputePolicy.NONE
+    # paper §5: "how many layers to recompute, which specific layers" —
+    # fraction of each stage's layers the recompute policy applies to;
+    # the rest store activations as AC-None.
+    recompute_fraction: float = 1.0
+    micro_batch: int = 1
+    seq_len: int = 4096
+    dtype: DTypePolicy = BF16_POLICY
+    # §6: temporary comm buffers [0.8, 2] GB and fragmentation [5%, 30%].
+    comm_buffer_bytes: int = int(0.8 * 2**30)
+    fragmentation: float = 0.05
+
+    def __post_init__(self) -> None:
+        for name in ("dp", "tp", "pp", "ep", "etp", "cp", "micro_batch", "seq_len"):
+            v = getattr(self, name)
+            if v < 1:
+                raise ValueError(f"{name} must be >= 1, got {v}")
+        if (self.dp * self.tp) % (self.ep * self.etp) != 0:
+            raise ValueError(
+                f"DP*TP ({self.dp}*{self.tp}) must be divisible by EP*ETP "
+                f"({self.ep}*{self.etp}) so expert groups tile the device grid")
+
+    @property
+    def world_size(self) -> int:
+        return self.dp * self.tp * self.pp
+
+    @property
+    def edp(self) -> int:
+        """Expert data parallelism (paper: EDP = DP*TP / (EP*ETP))."""
+        return (self.dp * self.tp) // (self.ep * self.etp)
+
+    @property
+    def sp_degree(self) -> int:
+        return self.tp if self.sp else 1
+
+    def describe(self) -> str:
+        return (f"DP{self.dp}@TP{self.tp}@PP{self.pp}@EP{self.ep}@ETP{self.etp}"
+                f"@EDP{self.edp}@CP{self.cp}@SP{self.sp_degree}"
+                f" zero={self.zero.value} ac={self.recompute.value}"
+                f" b={self.micro_batch} s={self.seq_len}")
+
+
+# Paper Table 5 reference case.
+PAPER_CONFIG = ParallelConfig(dp=32, tp=2, pp=16, ep=8, etp=1, sp=True,
+                              micro_batch=1, seq_len=4096)

@@ -1,0 +1,97 @@
+"""Beyond-paper: parallel-configuration planner.
+
+The paper derives memory for ONE hand-picked config (Table 5).  The natural
+product of its analysis is a *search*: given a model, a device HBM budget and
+a world size, enumerate feasible (TP, PP, EP, ZeRO, recompute, micro-batch)
+configurations and rank them — fewest-recompute-first (recompute trades ~30%
+step FLOPs for memory), then widest micro-batch, then least model-parallel
+fragmentation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from .memory_model import MemoryEstimate, estimate_memory
+from .notation import ModelSpec
+from .parallel_config import ParallelConfig, RecomputePolicy, ZeROStage
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    cfg: ParallelConfig
+    estimate: MemoryEstimate
+
+    @property
+    def headroom(self) -> int:
+        return self._budget - self.estimate.total if hasattr(self, "_budget") else 0
+
+
+def _divisors(n: int, cap: int = 1 << 30) -> List[int]:
+    return [d for d in range(1, min(n, cap) + 1) if n % d == 0]
+
+
+def enumerate_configs(spec: ModelSpec, world_size: int, *,
+                      seq_len: int,
+                      micro_batches: Sequence[int] = (1, 2, 4),
+                      max_tp: int = 16,
+                      zero_stages: Sequence[ZeROStage] = tuple(ZeROStage),
+                      recompute: Sequence[RecomputePolicy] = (
+                          RecomputePolicy.NONE, RecomputePolicy.SELECTIVE,
+                          RecomputePolicy.FULL),
+                      sp: bool = True) -> Iterable[ParallelConfig]:
+    """All coherent configs tiling ``world_size`` devices."""
+    n_exp = spec.moe.n_routed if spec.is_moe else 1
+    for pp in _divisors(world_size):
+        if pp > spec.n_layers:
+            continue
+        rest = world_size // pp
+        for tp in _divisors(rest, cap=max_tp):
+            if spec.n_h % tp:
+                continue
+            dp = rest // tp
+            eps = [e for e in _divisors(dp * tp) if n_exp % e == 0] \
+                if spec.is_moe else [1]
+            for ep in eps:
+                if (dp * tp) % ep:
+                    continue
+                for z, r, b in itertools.product(zero_stages, recompute,
+                                                 micro_batches):
+                    try:
+                        yield ParallelConfig(
+                            dp=dp, tp=tp, pp=pp, ep=ep, etp=1, sp=sp and tp > 1,
+                            zero=z, recompute=r, micro_batch=b, seq_len=seq_len)
+                    except ValueError:
+                        continue
+
+
+def plan(spec: ModelSpec, world_size: int, hbm_bytes: int, *,
+         seq_len: int = 4096, top_k: int = 10,
+         **enum_kw) -> List[PlanEntry]:
+    """Feasible configs under the HBM budget, best-first.
+
+    Ranking: least recompute, largest micro-batch, least TP*PP (model-parallel
+    keeps devices busier when avoidable), then most headroom.
+    """
+    order_r = {RecomputePolicy.NONE: 0, RecomputePolicy.SELECTIVE: 1,
+               RecomputePolicy.FULL: 2}
+    entries: List[PlanEntry] = []
+    for cfg in enumerate_configs(spec, world_size, seq_len=seq_len, **enum_kw):
+        est = estimate_memory(spec, cfg)
+        if est.total <= hbm_bytes:
+            entries.append(PlanEntry(cfg, est))
+    entries.sort(key=lambda e: (order_r[e.cfg.recompute], -e.cfg.micro_batch,
+                                e.cfg.tp * e.cfg.pp, e.estimate.total))
+    return entries[:top_k]
+
+
+def min_memory_config(spec: ModelSpec, world_size: int, *,
+                      seq_len: int = 4096, **enum_kw) -> Optional[PlanEntry]:
+    best: Optional[PlanEntry] = None
+    for cfg in enumerate_configs(spec, world_size, seq_len=seq_len, **enum_kw):
+        est = estimate_memory(spec, cfg)
+        if best is None or est.total < best.estimate.total:
+            best = PlanEntry(cfg, est)
+    return best

@@ -1,0 +1,93 @@
+"""Render the paper's tables from the analytical model (used by benchmarks)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from . import params as P
+from .activations import table10
+from .memory_model import estimate_memory
+from .notation import ModelSpec, human_bytes, human_count
+from .parallel_config import ParallelConfig, RecomputePolicy, ZeROStage
+from .zero import zero_table
+
+
+def _table(headers: List[str], rows: List[List[str]]) -> str:
+    widths = [max(len(h), *(len(r[i]) for r in rows)) for i, h in enumerate(headers)]
+    fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+    lines = [fmt.format(*headers), fmt.format(*("-" * w for w in widths))]
+    lines += [fmt.format(*r) for r in rows]
+    return "\n".join(lines)
+
+
+def render_table3(spec: ModelSpec) -> str:
+    rows = []
+    for r in P.table3_rows(spec):
+        for i, (mod, n) in enumerate(r.modules.items()):
+            rows.append([r.layers if i == 0 else "", mod, f"{n:,}",
+                         human_count(r.per_layer) if i == 0 else "",
+                         human_bytes(r.per_layer * 2) if i == 0 else ""])
+    total = P.total_params_paper(spec)
+    rows.append(["Total", "", f"{total:,}", human_count(total),
+                 human_bytes(total * 2)])
+    return _table(["Layers", "Module", "No. Params", "Per Layer", "BF16"], rows)
+
+
+def render_table4(spec: ModelSpec, pp: int) -> str:
+    rows = []
+    for r in P.table4_stages(spec, pp):
+        rows.append([f"Stage {r.stage}", str(len(r.layers)),
+                     human_count(r.params), human_bytes(r.params * 2)])
+    total = sum(r.params for r in P.table4_stages(spec, pp))
+    rows.append(["Sum", str(spec.n_layers), human_count(total),
+                 human_bytes(total * 2)])
+    return _table(["Stage", "Layers", "Params", "BF16"], rows)
+
+
+def render_table6(spec: ModelSpec, cfg: ParallelConfig) -> str:
+    d = P.device_params(spec, cfg)
+    rows = [
+        ["RMSNorm 1&2", f"{d.norms:,}", human_bytes(d.norms * 2)],
+        ["Attn (TP split)", f"{d.attn_tp:,}", human_bytes(d.attn_tp * 2)],
+        ["Attn (replicated)", f"{d.attn_replicated:,}",
+         human_bytes(d.attn_replicated * 2)],
+        ["Dense MLP", f"{d.dense_mlp:,}", human_bytes(d.dense_mlp * 2)],
+        ["SSM", f"{d.ssm:,}", human_bytes(d.ssm * 2)],
+        ["Embed/Head", f"{d.embed:,}", human_bytes(d.embed * 2)],
+        ["Non-MoE part", f"{d.non_expert:,}", human_bytes(d.non_expert * 2)],
+        ["Router", f"{d.router:,}", human_bytes(d.router * 2)],
+        ["Experts", f"{d.experts:,}", human_bytes(d.experts * 2)],
+        ["MoE part", f"{d.expert:,}", human_bytes(d.expert * 2)],
+        ["Total", f"{d.total:,}", human_bytes(d.total * 2)],
+    ]
+    return _table(["Module", "Params/device", "Bytes"], rows)
+
+
+def render_table8(spec: ModelSpec, cfg: ParallelConfig) -> str:
+    rows = []
+    for name, m in zero_table(spec, cfg).items():
+        rows.append([name, human_bytes(m.params), human_bytes(m.grads),
+                     human_bytes(m.optimizer), human_bytes(m.total)])
+    return _table(["ZeRO", "Params", "Grads", "Optimizer", "P+G+O"], rows)
+
+
+def render_table10(spec: ModelSpec, cfg: ParallelConfig) -> str:
+    t = table10(spec, cfg)
+    rows = []
+    for comp in ("MLA", "MoE", "Total"):
+        rows.append([comp, human_bytes(t["none"][comp]),
+                     human_bytes(t["full"][comp])])
+    return _table([f"Component (b={cfg.micro_batch}, s={cfg.seq_len})",
+                   "AC None", "AC Full"], rows)
+
+
+def render_full_estimate(spec: ModelSpec, cfg: ParallelConfig) -> str:
+    rows = []
+    for z in ZeROStage:
+        for r in (RecomputePolicy.NONE, RecomputePolicy.FULL):
+            c = dataclasses.replace(cfg, zero=z, recompute=r)
+            e = estimate_memory(spec, c)
+            rows.append([z.value, r.value, human_bytes(e.state_total),
+                         human_bytes(e.activations), human_bytes(e.total)])
+    return _table(["ZeRO", "AC", "P+G+O", "Activations", "Total/device"], rows)

@@ -1,0 +1,64 @@
+"""DeepSpeed-ZeRO memory math (paper §4, Table 8).
+
+ZeRO shards training state across the gradient-sync group.  Because expert
+parameters sync across EDP (not DP), the expert and non-expert parts shard
+with different divisors — the central observation of paper §4:
+
+    per_device = non_expert/DP + expert/EDP     (times bytes-per-param)
+
+Byte multipliers come from Table 7: weights 2 B, gradients 4 B, optimizer
+8 B (fp32 master + bf16 momentum + bf16 variance).  Note the paper's §4 prose
+swaps the gradient/optimizer multipliers; Tables 7 and 8 are self-consistent
+and we follow the tables (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .notation import ModelSpec
+from .params import DeviceParams, device_params
+from .parallel_config import ParallelConfig, ZeROStage
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStateBytes:
+    params: int
+    grads: int
+    optimizer: int
+
+    @property
+    def total(self) -> int:
+        return self.params + self.grads + self.optimizer
+
+
+def _sharded(dev: DeviceParams, cfg: ParallelConfig, bytes_per: int) -> int:
+    return (dev.non_expert // cfg.dp + dev.expert // cfg.edp) * bytes_per
+
+
+def zero_memory(spec: ModelSpec, cfg: ParallelConfig,
+                stage: int = None) -> TrainStateBytes:
+    """Per-device bytes of params/grads/optimizer for one PP stage."""
+    dev = device_params(spec, cfg, stage=stage)
+    dt = cfg.dtype
+    full_p = dev.total * dt.weights
+    full_g = dev.total * dt.gradient
+    full_o = dev.total * dt.optimizer
+
+    z = cfg.zero
+    opt = _sharded(dev, cfg, dt.optimizer) if z != ZeROStage.NONE else full_o
+    grads = _sharded(dev, cfg, dt.gradient) \
+        if z in (ZeROStage.OS_G, ZeROStage.OS_G_PARAMS) else full_g
+    params = _sharded(dev, cfg, dt.weights) \
+        if z == ZeROStage.OS_G_PARAMS else full_p
+    return TrainStateBytes(params=params, grads=grads, optimizer=opt)
+
+
+def zero_table(spec: ModelSpec, cfg: ParallelConfig) -> Dict[str, TrainStateBytes]:
+    """Paper Table 8: all four ZeRO strategies for the given config."""
+    out = {}
+    for z in ZeROStage:
+        c = dataclasses.replace(cfg, zero=z)
+        out[z.value] = zero_memory(spec, c)
+    return out

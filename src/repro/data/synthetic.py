@@ -1,0 +1,79 @@
+"""Deterministic synthetic token pipeline.
+
+Generates language-like token streams (Zipfian unigram + short-range
+repetition structure so the loss actually decreases) plus the stub-frontend
+embeddings for VLM/audio architectures.  Fully deterministic in (seed, step)
+— reproducible across hosts, shardable along the batch dim.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.notation import FamilyKind, ModelSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticConfig:
+    batch: int
+    seq_len: int
+    vocab: int
+    seed: int = 0
+    zipf_alpha: float = 1.1
+    repeat_prob: float = 0.3      # p(copy token from 8 back) — learnable signal
+    n_vision_tokens: int = 0      # VLM stub patches
+    n_audio_frames: int = 0       # audio stub frames
+    h: int = 0
+
+
+def _zipf_logits(vocab: int, alpha: float) -> np.ndarray:
+    ranks = np.arange(1, vocab + 1, dtype=np.float64)
+    p = ranks ** -alpha
+    return np.log(p / p.sum())
+
+
+def make_batch(cfg: SyntheticConfig, step: int) -> Dict[str, jnp.ndarray]:
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, step]))
+    logits = _zipf_logits(cfg.vocab, cfg.zipf_alpha)
+    probs = np.exp(logits)
+    toks = rng.choice(cfg.vocab, size=(cfg.batch, cfg.seq_len), p=probs)
+    # inject copy structure: with prob repeat_prob, token = token[t-8]
+    mask = rng.random((cfg.batch, cfg.seq_len)) < cfg.repeat_prob
+    mask[:, :8] = False
+    shifted = np.roll(toks, 8, axis=1)
+    toks = np.where(mask, shifted, toks).astype(np.int32)
+    batch: Dict[str, jnp.ndarray] = {"tokens": jnp.asarray(toks)}
+    if cfg.n_vision_tokens:
+        ve = rng.standard_normal(
+            (cfg.batch, cfg.n_vision_tokens, cfg.h)).astype(np.float32)
+        batch["vision_embeds"] = jnp.asarray(ve * 0.02, jnp.bfloat16)
+    if cfg.n_audio_frames:
+        ae = rng.standard_normal(
+            (cfg.batch, cfg.n_audio_frames, cfg.h)).astype(np.float32)
+        batch["audio_embeds"] = jnp.asarray(ae * 0.02, jnp.bfloat16)
+    return batch
+
+
+def batches(cfg: SyntheticConfig, n_steps: Optional[int] = None
+            ) -> Iterator[Dict[str, jnp.ndarray]]:
+    step = 0
+    while n_steps is None or step < n_steps:
+        yield make_batch(cfg, step)
+        step += 1
+
+
+def config_for(spec: ModelSpec, batch: int, seq_len: int,
+               seed: int = 0) -> SyntheticConfig:
+    nv = na = 0
+    if spec.family == FamilyKind.VLM:
+        nv = min(256, seq_len // 4)
+    if spec.encoder is not None:
+        na = spec.encoder.n_ctx
+    return SyntheticConfig(batch=batch, seq_len=seq_len, vocab=spec.vocab,
+                           seed=seed, n_vision_tokens=nv, n_audio_frames=na,
+                           h=spec.h)

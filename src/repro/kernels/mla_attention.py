@@ -1,0 +1,107 @@
+"""Flash-style causal attention Pallas TPU kernel (MLA-shaped).
+
+The paper's dominant activation term is the 5·b·n_h·s² score/softmax family
+(§5.1) — the tensor this kernel eliminates.  Online-softmax tiles keep the
+working set at (block_q × block_k) in VMEM, so activation memory drops from
+O(s²) to O(s), which is the memory-roofline win recorded in EXPERIMENTS.md
+§Perf.
+
+MLA shape notes: q/k head dim = d_h + d_hr (192 for DeepSeek-v3), v head
+dim = d_v (128) — the kernel supports dq != dv.  GQA reuses the same kernel
+after head replication.  MXU alignment: block_q/block_k multiples of 128;
+dq=192 is 1.5 lanes — the compiler packs 192 = 128+64; on real TPU pad to
+256 for peak MXU utilisation (benchmarks sweep both).
+
+Grid: (batch*heads, q_blocks); the kernel fori-loops over k blocks up to the
+causal frontier carrying (m, l, acc) in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0 ** 30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_k: int,
+                  scale: float, seq_len: int, causal: bool):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale          # (block_q, dq)
+    dv = v_ref.shape[-1]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    n_kb = seq_len // block_k
+    hi = jax.lax.min(((qi + 1) * block_q + block_k - 1) // block_k, n_kb) \
+        if causal else n_kb
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T                                     # (block_q, block_k)
+        if causal:
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * alpha + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    a0 = jnp.zeros((block_q, dv), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, hi, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           scale: float, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q/k: (b, s, n_h, dq); v: (b, s, n_h, dv) -> (b, s, n_h, dv).
+
+    s is padded to a block multiple internally; causal masking makes the
+    padding inert for the valid rows.
+    """
+    b, s, nh, dq = q.shape
+    dv = v.shape[-1]
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    n_qb = -(-s // bq)
+    s_pad = n_qb * bq
+    # unify q/k padding to one padded length divisible by both blocks
+    s_pad = -(-s_pad // bk) * bk
+    n_qb = s_pad // bq
+    if s_pad != s:
+        padder = ((0, 0), (0, s_pad - s), (0, 0), (0, 0))
+        q = jnp.pad(q, padder)
+        k = jnp.pad(k, padder)
+        v = jnp.pad(v, padder)
+
+    # fold batch & heads: (b*nh, s_pad, d)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * nh, s_pad, dq)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * nh, s_pad, dq)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * nh, s_pad, dv)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=bq, block_k=bk, scale=scale,
+                          seq_len=s_pad, causal=causal),
+        grid=(b * nh, n_qb),
+        in_specs=[
+            pl.BlockSpec((None, bq, dq), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, s_pad, dq), lambda h, i: (h, 0, 0)),
+            pl.BlockSpec((None, s_pad, dv), lambda h, i: (h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dv), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * nh, s_pad, dv), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, nh, s_pad, dv).transpose(0, 2, 1, 3)
+    return out[:, :s]

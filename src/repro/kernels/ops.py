@@ -1,0 +1,52 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU and are validated in interpret mode per the task brief).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mla_attention import flash_attention_pallas
+from .moe_gmm import gmm_pallas, pad_groups
+from .rmsnorm import rmsnorm_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "gemma_style",
+                                             "block_rows", "interpret"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, gemma_style: bool = False,
+            block_rows: int = 256, interpret: bool = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return rmsnorm_pallas(x, scale, eps=eps, gemma_style=gemma_style,
+                          block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return flash_attention_pallas(q, k, v, scale=scale, causal=causal,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def gmm(lhs, rhs, expert_map, *, block_m: int = 128, block_n: int = 128,
+        interpret: bool = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return gmm_pallas(lhs, rhs, expert_map, block_m=block_m, block_n=block_n,
+                      interpret=interpret)
+
+
+__all__ = ["rmsnorm", "flash_attention", "gmm", "pad_groups"]

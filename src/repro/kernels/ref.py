@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+                gemma_style: bool = False) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    g = scale.astype(jnp.float32)
+    if gemma_style:
+        g = 1.0 + g
+    return (y * g).astype(x.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        scale: float, causal: bool = True) -> jnp.ndarray:
+    """Naive softmax attention. q/k: (b,s,nh,dq), v: (b,s,nh,dv)."""
+    s = q.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gmm_ref(lhs: jnp.ndarray, rhs: jnp.ndarray, expert_map: jnp.ndarray,
+            *, block_m: int = 128) -> jnp.ndarray:
+    """Row-block-wise grouped matmul oracle."""
+    M, K = lhs.shape
+    out = []
+    for blk in range(M // block_m):
+        e = int(expert_map[blk])
+        xb = lhs[blk * block_m:(blk + 1) * block_m].astype(jnp.float32)
+        out.append((xb @ rhs[e].astype(jnp.float32)).astype(lhs.dtype))
+    return jnp.concatenate(out, axis=0)

@@ -1,0 +1,62 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+The paper's block (Figure 1) runs two RMSNorms per layer over (tokens, h)
+activations; fused normalisation avoids one HBM round-trip of the (T, h)
+tensor (memory-bound op: arithmetic intensity ~O(1)).
+
+Tiling: grid over row blocks; each program normalises a (block_rows, h)
+tile held in VMEM.  h is padded by the caller to a multiple of 128 (lane
+width); block_rows chosen so the tile fits VMEM (~16 MiB/core).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float,
+                    gemma_style: bool):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    g = scale_ref[...].astype(jnp.float32)
+    if gemma_style:
+        g = 1.0 + g
+    o_ref[...] = (y * g[None, :]).astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x: jnp.ndarray, scale: jnp.ndarray, *, eps: float = 1e-6,
+                   gemma_style: bool = False, block_rows: int = 256,
+                   interpret: bool = False) -> jnp.ndarray:
+    """x: (..., h) -> (..., h).  h should be a multiple of 128 on real TPU."""
+    orig_shape = x.shape
+    h = x.shape[-1]
+    rows = 1
+    for d in x.shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, h)
+    br = min(block_rows, rows)
+    # pad rows to a block multiple
+    n_blocks = -(-rows // br)
+    pad = n_blocks * br - rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps, gemma_style=gemma_style),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((br, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * br, h), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

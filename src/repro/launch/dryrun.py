@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) on placeholder devices; record memory_analysis / cost_analysis /
+collective bytes for EXPERIMENTS.md §Dry-run and the §Roofline table.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe-1b-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-v3 --shape train_4k \
+      --zero os+g --recompute full --attn chunked --n-micro 16
+
+Results cache to benchmarks/artifacts/dryrun/<tag>.json; --force recomputes.
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_spec
+from repro.core.parallel_config import RecomputePolicy, ZeROStage
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (SHAPES, batch_shardings, batch_specs,
+                                cache_shardings, input_specs,
+                                shape_skip_reason, spec_for_shape)
+from repro.models import build_model
+from repro.models.transformer import ModelOptions
+from repro.optim.adamw import TrainState
+from repro.parallel.axes import axis_rules
+from repro.parallel.sharding import grad_shardings, state_shardings
+from repro.serving.decode import make_serve_step
+from repro.train.loop import TrainConfig, make_train_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+_OP_DEF_RE = re.compile(
+    r"=\s*(.*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all"
+    r"|collective-permute)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            continue   # token like u32 index types unknown -> skipped above
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum result sizes of every collective op-def in optimized HLO
+    (handles variadic tuple-shaped collectives; skips -done halves so async
+    pairs count once)."""
+    per_kind: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_DEF_RE.search(line)
+        if not m:
+            continue
+        shape_text, kind, suffix = m.groups()
+        if suffix == "-done":
+            continue
+        nbytes = _shape_bytes(shape_text)
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes_by_kind": per_kind, "counts": counts,
+            "total_bytes": sum(per_kind.values())}
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def build_step(arch: str, shape_name: str, *, attn_impl: str = "naive",
+               recompute: str = "none", zero: str = "os+g",
+               n_micro: int = 1, capacity_factor: float = 1.25,
+               scan_layers: bool = True, spec_override=None,
+               moe_impl: str = "scatter"):
+    """Returns (fn, abstract_args, in_shardings, out_shardings, meta)."""
+    spec0 = spec_override if spec_override is not None else get_spec(arch)
+    spec = spec_for_shape(spec0, shape_name)
+    info = SHAPES[shape_name]
+    opts = ModelOptions(attn_impl=attn_impl,
+                        recompute=RecomputePolicy(recompute),
+                        capacity_factor=capacity_factor,
+                        scan_layers=scan_layers,
+                        moe_impl=moe_impl)
+    model = build_model(spec, opts)
+    mesh = None  # bound by caller via axis_rules
+    z = ZeROStage(zero)
+
+    if info["kind"] == "train":
+        from repro.optim.adamw import init_train_state
+        step = make_train_step(model, TrainConfig(n_micro=n_micro))
+        abstract_state = jax.eval_shape(init_train_state,
+                                        model.abstract_params())
+        batch = batch_specs(spec, info["batch"], info["seq"])
+        return dict(kind="train", fn=step, model=model, spec=spec,
+                    abstract_state=abstract_state, batch=batch, zero=z)
+    if info["kind"] == "prefill":
+        def prefill_fn(params, batch):
+            logits, _ = model.forward(params, batch)
+            return logits
+        return dict(kind="prefill", fn=prefill_fn, model=model, spec=spec,
+                    abstract_params=model.abstract_params(),
+                    batch=batch_specs(spec, info["batch"], info["seq"]),
+                    zero=z)
+    # decode
+    serve = make_serve_step(model)
+    ins = input_specs(spec0, shape_name, model=model)
+    return dict(kind="decode", fn=serve, model=model, spec=spec,
+                abstract_params=model.abstract_params(),
+                cache=ins["cache"], tokens=ins["tokens"], zero=z)
+
+
+def lower_and_compile(built: Dict[str, Any], mesh) -> Dict[str, Any]:
+    kind = built["kind"]
+    z = built["zero"]
+    t0 = time.perf_counter()
+    with axis_rules(mesh):
+        if kind == "train":
+            st_sh = state_shardings(built["abstract_state"], mesh, z)
+            b_sh = batch_shardings(built["batch"], mesh)
+            lowered = jax.jit(
+                built["fn"],
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None),
+            ).lower(built["abstract_state"], built["batch"])
+        elif kind == "prefill":
+            p_sh = state_shardings(
+                _fake_state(built["abstract_params"]), mesh, z).params
+            b_sh = batch_shardings(built["batch"], mesh)
+            lowered = jax.jit(
+                built["fn"], in_shardings=(p_sh, b_sh),
+            ).lower(built["abstract_params"], built["batch"])
+        else:
+            p_sh = state_shardings(
+                _fake_state(built["abstract_params"]), mesh, z).params
+            c_sh = cache_shardings(built["cache"], mesh)
+            t_sh = batch_shardings({"t": built["tokens"]}, mesh)["t"]
+            lowered = jax.jit(
+                built["fn"], in_shardings=(p_sh, c_sh, t_sh),
+                out_shardings=(None, c_sh),
+            ).lower(built["abstract_params"], built["cache"], built["tokens"])
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+    return dict(lowered=lowered, compiled=compiled,
+                t_lower=t_lower, t_compile=t_compile)
+
+
+def _fake_state(abstract_params):
+    from repro.optim.adamw import TrainState
+    z = jax.ShapeDtypeStruct((), jnp.int32)
+    return TrainState(step=z, params=abstract_params,
+                      master=abstract_params, m=abstract_params,
+                      v=abstract_params)
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            force: bool = False, tag_suffix: str = "",
+            mesh_shape=None, **build_kw) -> Dict[str, Any]:
+    os.makedirs(ART_DIR, exist_ok=True)
+    if mesh_shape is not None:
+        mesh_tag = "pod" + ("2x" if multi_pod else "") \
+            + "x".join(map(str, mesh_shape))
+    else:
+        mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_tag}{tag_suffix}"
+    path = os.path.join(ART_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    spec = get_spec(arch)
+    skip = shape_skip_reason(spec, shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_tag, "options": build_kw}
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+    else:
+        try:
+            mesh = make_production_mesh(multi_pod=multi_pod,
+                                        shape=mesh_shape)
+            built = build_step(arch, shape_name, **build_kw)
+            art = lower_and_compile(built, mesh)
+            compiled = art["compiled"]
+            mem = compiled.memory_analysis()
+            print(mem)                       # proves it fits / reports bytes
+            cost = compiled.cost_analysis()
+            print({k: v for k, v in list(cost.items())[:8]})
+            hlo = compiled.as_text()
+            rec.update(
+                status="ok",
+                t_lower_s=art["t_lower"],
+                t_compile_s=art["t_compile"],
+                memory=_mem_dict(mem),
+                flops=float(cost.get("flops", -1)),
+                bytes_accessed=float(cost.get("bytes accessed", -1)),
+                transcendentals=float(cost.get("transcendentals", -1)),
+                collectives=collective_bytes(hlo),
+                hlo_size_chars=len(hlo),
+            )
+        except Exception as e:
+            rec["status"] = "error"
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-4000:]
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    status = rec["status"]
+    print(f"[{tag}] {status}" + (f" ({rec.get('error','')})"
+                                 if status == "error" else ""))
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--zero", default="os+g",
+                    choices=[z.value for z in ZeROStage])
+    ap.add_argument("--recompute", default="none",
+                    choices=[r.value for r in RecomputePolicy])
+    ap.add_argument("--attn", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--capacity-factor", type=float, default=1.25)
+    ap.add_argument("--moe-impl", default="scatter",
+                    choices=["scatter", "a2a"])
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override per-pod grid, e.g. 32x8")
+    ap.add_argument("--tag-suffix", default="")
+    args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh_shape.split("x")) \
+        if args.mesh_shape else None
+
+    build_kw = dict(zero=args.zero, recompute=args.recompute,
+                    attn_impl=args.attn, n_micro=args.n_micro,
+                    capacity_factor=args.capacity_factor,
+                    moe_impl=args.moe_impl)
+
+    combos = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch & --shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = 0
+    for a, s in combos:
+        rec = run_one(a, s, multi_pod=args.multi_pod, force=args.force,
+                      tag_suffix=args.tag_suffix, mesh_shape=mesh_shape,
+                      **build_kw)
+        if rec["status"] == "error":
+            failures += 1
+    print(f"done: {len(combos)} combos, {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

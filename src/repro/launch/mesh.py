@@ -1,0 +1,54 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model") — the roofline
+table's mesh.  Multi-pod: (2, 16, 16) = 512 chips, axes ("pod", "data",
+"model"); the "pod" axis extends data parallelism across the ICI/DCN
+boundary (DP-major placement, matching the paper's DP×EDP grouping where
+ZeRO shards span data×pod).
+
+Defined as FUNCTIONS so importing this module never initialises jax device
+state (the dry-run must set XLA_FLAGS before first jax use).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.parallel_config import ParallelConfig, ZeROStage
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """Default single-pod (16,16) / multi-pod (2,16,16).  ``shape`` overrides
+    the per-pod grid, e.g. (32, 8) — a decode-shaped mesh whose model axis
+    divides small KV-head counts (§Perf hillclimb 3); total chips must stay
+    256/pod."""
+    if shape is not None:
+        shape = tuple(shape)
+        if multi_pod:
+            return jax.make_mesh((2,) + shape, ("pod", "data", "model"))
+        return jax.make_mesh(shape, ("data", "model"))
+    mesh_shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(mesh_shape, axes)
+
+
+def make_debug_mesh(model: int = 1, data: int = 1):
+    """Tiny mesh over however many (possibly fake) local devices exist."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def parallel_config_for_mesh(mesh, *, spec=None, zero: ZeROStage = ZeROStage.OS_G,
+                             micro_batch: int = 1, seq_len: int = 4096,
+                             recompute="none") -> ParallelConfig:
+    """Analytical-model view of a mesh: TP/EP live on the 'model' axis, DP on
+    data(+pod).  Used to compare estimate_memory() with XLA's
+    memory_analysis() for the same configuration."""
+    from repro.core.parallel_config import RecomputePolicy
+    model_ax = mesh.shape.get("model", 1)
+    data_ax = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    n_exp = spec.moe.n_routed if (spec is not None and spec.is_moe) else None
+    ep = min(model_ax, n_exp) if n_exp else 1
+    rc = RecomputePolicy(recompute) if isinstance(recompute, str) else recompute
+    return ParallelConfig(dp=data_ax, tp=model_ax, pp=1, ep=ep, etp=1,
+                          sp=True, zero=zero, recompute=rc,
+                          micro_batch=micro_batch, seq_len=seq_len)

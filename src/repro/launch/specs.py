@@ -1,0 +1,169 @@
+"""Input/State ShapeDtypeStruct stand-ins + shardings for the dry-run.
+
+``input_specs(spec, shape_name)`` returns abstract inputs for the step kind
+the shape dictates (train / prefill / decode), with no device allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.notation import AttentionKind, FamilyKind, ModelSpec
+
+PyTree = Any
+
+# the assigned input-shape pool
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+SLIDING_WINDOW_LONG = 8192     # dense archs' long_500k variant (DESIGN.md §4)
+
+
+def shape_skip_reason(spec: ModelSpec, shape_name: str) -> Optional[str]:
+    info = SHAPES[shape_name]
+    if info["kind"] == "decode" and spec.family == FamilyKind.AUDIO \
+            and shape_name == "long_500k":
+        return ("whisper decoder max context is 448; long_500k decode is "
+                "out of family scope (DESIGN.md §4)")
+    return None
+
+
+def spec_for_shape(spec: ModelSpec, shape_name: str) -> ModelSpec:
+    """Architecture variant used for a given input shape: dense/MoE/VLM archs
+    switch to the sliding-window decode variant for long_500k (sub-quadratic
+    requirement); SSM/hybrid run natively."""
+    if shape_name == "long_500k" and spec.attention != AttentionKind.NONE \
+            and spec.ssm is None:
+        return dataclasses.replace(spec, sliding_window=SLIDING_WINDOW_LONG)
+    return spec
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_specs(spec: ModelSpec, batch: int, seq: int) -> Dict[str, Any]:
+    b: Dict[str, Any] = {"tokens": _sds((batch, seq), jnp.int32)}
+    if spec.family == FamilyKind.VLM:
+        b["vision_embeds"] = _sds((batch, min(256, seq // 4), spec.h),
+                                  jnp.bfloat16)
+    if spec.encoder is not None:
+        b["audio_embeds"] = _sds((batch, spec.encoder.n_ctx, spec.h),
+                                 jnp.bfloat16)
+    return b
+
+
+def cache_specs(model, spec: ModelSpec, batch: int, cache_len: int
+                ) -> PyTree:
+    """Abstract cache pytree via eval_shape of init_cache."""
+    enc = None
+    if spec.encoder is not None:
+        enc = _sds((batch, spec.encoder.n_ctx, spec.h), jnp.bfloat16)
+
+    def mk(enc_out):
+        return model.init_cache(batch, cache_len, enc_out=enc_out)
+
+    if enc is not None:
+        return jax.eval_shape(mk, enc)
+    return jax.eval_shape(lambda: mk(None))
+
+
+def input_specs(spec: ModelSpec, shape_name: str, model=None
+                ) -> Dict[str, Any]:
+    """Abstract inputs for (arch, shape): train/prefill → batch dict;
+    decode → {'cache': ..., 'tokens': (b,1)}."""
+    info = SHAPES[shape_name]
+    sp = spec_for_shape(spec, shape_name)
+    if info["kind"] in ("train", "prefill"):
+        return {"batch": batch_specs(sp, info["batch"], info["seq"])}
+    from repro.models import build_model
+    model = model or build_model(sp)
+    eff = min(info["seq"], sp.sliding_window) if sp.sliding_window \
+        else info["seq"]
+    cache = cache_specs(model, sp, info["batch"], eff)
+    return {"cache": cache,
+            "tokens": _sds((info["batch"], 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# shardings for inputs & caches
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_shardings(abstract_batch: PyTree, mesh: Mesh) -> PyTree:
+    ba = _batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in ba]))
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % bsz == 0:
+            return NamedSharding(mesh, P(ba, *(None,) * (len(leaf.shape) - 1)))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, abstract_batch)
+
+
+def cache_placement(shape: Tuple[int, ...], batch_size: int, model_size: int
+                    ) -> Tuple[Optional[str], ...]:
+    """Single source of truth for cache-leaf placement (used by the dry-run
+    shardings AND the analytical validation): 'batch' on dim 1 when
+    divisible, else context-parallel 'batch' on dim 2 (long_500k b=1);
+    'model' on the preferred heads/feature dim by rank."""
+    if not shape:
+        return ()
+    dims: list = [None] * len(shape)
+    if len(shape) >= 2 and shape[1] % batch_size == 0 and batch_size > 1:
+        dims[1] = "batch"
+    elif len(shape) >= 3 and shape[2] % batch_size == 0 and batch_size > 1:
+        dims[2] = "batch"          # context-parallel: shard cache sequence
+    # model-axis preference by rank:
+    #   rank5 kv (L,b,s,n_kv,d) / ssm (L,b,nh,hd,sd): heads first, then the
+    #   SEQUENCE dim, then head_dim.  Head_dim sharding is last on purpose:
+    #   it makes the decode q·k contraction emit PARTIAL scores that
+    #   all-reduce at full cache width (measured 3.9 s/chip of ICI on
+    #   qwen2-vl decode_32k, §Perf hillclimb 3); seq-sharding keeps scores
+    #   local and only reduces the tiny softmax stats / context partials.
+    #   rank4 latent (L,b,s,d_c): feature dim;  rank3 (L,b,h): feature dim
+    if model_size > 1:
+        prefer = {5: (3, 2, 4), 4: (3,), 3: (2,)}.get(len(shape), ())
+        for d in prefer:
+            if dims[d] is None and shape[d] % model_size == 0 \
+                    and shape[d] >= model_size:
+                dims[d] = "model"
+                break
+    return tuple(dims)
+
+
+def cache_divisor(shape: Tuple[int, ...], batch_size: int,
+                  model_size: int) -> int:
+    div = 1
+    for d in cache_placement(shape, batch_size, model_size):
+        if d == "batch":
+            div *= batch_size
+        elif d == "model":
+            div *= model_size
+    return div
+
+
+def cache_shardings(abstract_cache: PyTree, mesh: Mesh) -> PyTree:
+    ba = _batch_axes(mesh)
+    bsz = int(np.prod([mesh.shape[a] for a in ba]))
+    msz = mesh.shape.get("model", 1)
+
+    def one(leaf):
+        dims = [ba if d == "batch" else d
+                for d in cache_placement(leaf.shape, bsz, msz)]
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(one, abstract_cache)

@@ -1,0 +1,6 @@
+"""Model substrate: composable pure-JAX definitions for all assigned
+architecture families (dense GQA/MQA, MLA+MoE, SSM, hybrid, enc-dec, VLM)."""
+
+from .model import Model, build_model
+
+__all__ = ["Model", "build_model"]

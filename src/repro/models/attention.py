@@ -1,0 +1,206 @@
+"""Standard attention family: MHA / GQA / MQA, causal, RoPE, KV cache,
+sliding-window variant (enables long-context decode for dense archs).
+
+Two score paths:
+* ``naive``   — materialises (b, n_h, s, s) scores; mirrors the paper's
+  activation accounting (the 5·b·n_h·s² term).
+* ``chunked`` — lax.scan online-softmax over KV blocks (flash-style, O(s)
+  activation memory); the beyond-paper memory optimization, and the jnp
+  twin of the Pallas kernel in ``repro.kernels``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.notation import ModelSpec
+from .layers import Params, apply_rope, dense_init
+
+NEG_INF = -2.0 ** 30
+
+
+def gqa_init(key: jax.Array, spec: ModelSpec, dtype=jnp.bfloat16) -> Params:
+    kq, kk, kv, ko, kb = jax.random.split(key, 5)
+    d, nh, nkv = spec.d_head, spec.n_h, spec.n_kv
+    p = {
+        "wq": dense_init(kq, (spec.h, nh * d), dtype),
+        "wk": dense_init(kk, (spec.h, nkv * d), dtype),
+        "wv": dense_init(kv, (spec.h, nkv * d), dtype),
+        "wo": dense_init(ko, (nh * d, spec.h), dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((nh * d,), dtype)
+        p["bk"] = jnp.zeros((nkv * d,), dtype)
+        p["bv"] = jnp.zeros((nkv * d,), dtype)
+    return p
+
+
+def _qkv(p: Params, spec: ModelSpec, x: jnp.ndarray,
+         positions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, _ = x.shape
+    d, nh, nkv = spec.d_head, spec.n_h, spec.n_kv
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if spec.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nh, d)
+    k = k.reshape(b, s, nkv, d)
+    v = v.reshape(b, s, nkv, d)
+    q = apply_rope(q, positions, spec.rope_theta)
+    k = apply_rope(k, positions, spec.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, nkv, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, nkv, n_rep, d)) \
+        .reshape(b, s, nkv * n_rep, d)
+
+
+def causal_mask(s: int, window: Optional[int] = None) -> jnp.ndarray:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m &= j > i - window
+    return m
+
+
+def naive_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    mask: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """q:(b,s,nh,d) k/v:(b,s,nh,d) mask:(s,s) -> (b,s,nh,d)."""
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      scale: float, block: int = 512,
+                      window: Optional[int] = None) -> jnp.ndarray:
+    """Online-softmax causal attention, O(s·block) live memory.
+
+    Scans over KV blocks carrying (m, l, acc) — the flash-attention
+    recurrence — so the s×s score matrix never materialises.
+    """
+    b, s, nh, d = q.shape
+    dv = v.shape[-1]                      # v head dim may differ (MLA)
+    nb = -(-s // block)
+    pad = nb * block - s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nb, block, nh, d)
+    vb = v.reshape(b, nb, block, nh, dv)
+    q32 = (q * scale).astype(jnp.float32)
+    qpos = jnp.arange(s)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, blk_idx = inputs
+        kpos = blk_idx * block + jnp.arange(block)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q32, kblk.astype(jnp.float32))
+        valid = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < s)
+        if window is not None:
+            valid &= kpos[None, :] > qpos[:, None] - window
+        sc = jnp.where(valid[None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nh, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nh, s), jnp.float32)
+    a0 = jnp.zeros((b, nh, s, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def gqa_forward(p: Params, spec: ModelSpec, x: jnp.ndarray,
+                positions: jnp.ndarray, *, impl: str = "naive",
+                window: Optional[int] = None) -> jnp.ndarray:
+    q, k, v = _qkv(p, spec, x, positions)
+    n_rep = spec.n_h // spec.n_kv
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    scale = spec.d_head ** -0.5
+    if impl == "pallas" and window is None:
+        from repro.kernels import ops as K
+        ctx = K.flash_attention(q, k, v, scale=scale, causal=True)
+    elif impl == "chunked":
+        ctx = chunked_attention(q, k, v, scale, window=window)
+    else:
+        mask = causal_mask(x.shape[1], window)
+        ctx = naive_attention(q, k, v, mask, scale)
+    b, s = x.shape[:2]
+    return ctx.reshape(b, s, spec.n_h * spec.d_head) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV cache; ring buffer when sliding_window is set)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # (b, cache_len, n_kv, d)
+    v: jnp.ndarray
+    index: jnp.ndarray      # () int32 — next absolute position
+
+
+def init_kv_cache(spec: ModelSpec, n_layers: int, b: int, cache_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (n_layers, b, cache_len, spec.n_kv, spec.d_head)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   index=jnp.zeros((), jnp.int32))
+
+
+def gqa_decode(p: Params, spec: ModelSpec, x: jnp.ndarray,
+               k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+               index: jnp.ndarray, *, window: Optional[int] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x: (b, 1, h); caches: (b, C, n_kv, d); index: ().
+
+    With ``window`` set, C == window and writes wrap (ring buffer) — the
+    sliding-window variant that makes long_500k feasible for dense archs.
+    Returns (out, new_k_cache, new_v_cache).
+    """
+    b = x.shape[0]
+    cache_len = k_cache.shape[1]
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q, k_new, v_new = _qkv(p, spec, x, pos)
+    slot = index % cache_len if window is not None else index
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, slot, axis=1)
+
+    n_rep = spec.n_h // spec.n_kv
+    kk = _repeat_kv(k_cache, n_rep)
+    vv = _repeat_kv(v_cache, n_rep)
+    scale = spec.d_head ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    kpos = jnp.arange(cache_len)
+    if window is not None:
+        valid = (kpos[None, :] <= index) | jnp.full((1, cache_len), True)
+        # ring buffer: every slot written within the last `window` steps is
+        # valid once index >= cache_len; before that only slots <= index.
+        valid = kpos <= jnp.minimum(index, cache_len - 1)
+        wrapped = index >= cache_len
+        valid = jnp.where(wrapped, jnp.ones_like(valid), valid)
+    else:
+        valid = kpos <= index
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    out = ctx.reshape(b, 1, spec.n_h * spec.d_head) @ p["wo"]
+    return out, k_cache, v_cache

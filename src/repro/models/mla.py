@@ -1,0 +1,133 @@
+"""Multi-Head Latent Attention (DeepSeek-v2/v3), paper §1/§3.2/§5.1.
+
+Training path mirrors Figure 2's activation pattern: query tower
+(W^DQ → norm → W^UQ/W^QR), latent KV (W^DKV → norm → W^UK/W^UV), shared
+rope key W^KR, softmax over concat(nope, rope) dims, W^O out.
+
+Decode path caches the *compressed* latent (d_c + d_hr per token — the MLA
+memory advantage the paper's Table 2 geometry implies) and absorbs W^UK into
+the query so scores contract in the 512-dim latent space.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.notation import ModelSpec
+from .layers import Params, apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -2.0 ** 30
+
+
+def mla_init(key: jax.Array, spec: ModelSpec, dtype=jnp.bfloat16) -> Params:
+    m = spec.mla
+    ks = jax.random.split(key, 8)
+    return {
+        "w_dq": dense_init(ks[0], (spec.h, m.d_cq), dtype),
+        "w_uq": dense_init(ks[1], (m.d_cq, spec.n_h * m.d_h), dtype),
+        "w_qr": dense_init(ks[2], (m.d_cq, spec.n_h * m.d_hr), dtype),
+        "w_dkv": dense_init(ks[3], (spec.h, m.d_c), dtype),
+        "w_uk": dense_init(ks[4], (m.d_c, spec.n_h * m.d_h), dtype),
+        "w_uv": dense_init(ks[5], (m.d_c, spec.n_h * m.d_v), dtype),
+        "w_kr": dense_init(ks[6], (spec.h, m.d_hr), dtype),
+        "w_o": dense_init(ks[7], (spec.n_h * m.d_v, spec.h), dtype),
+        "q_norm": rmsnorm_init(m.d_cq, dtype),
+        "kv_norm": rmsnorm_init(m.d_c, dtype),
+    }
+
+
+def _towers(p: Params, spec: ModelSpec, x: jnp.ndarray,
+            positions: jnp.ndarray):
+    """Shared by train fwd and prefill: returns q (nope‖rope), k (nope‖rope), v."""
+    m = spec.mla
+    b, s, _ = x.shape
+    cq = rmsnorm(p["q_norm"], x @ p["w_dq"], spec.norm_eps)
+    q_nope = (cq @ p["w_uq"]).reshape(b, s, spec.n_h, m.d_h)
+    q_rope = apply_rope((cq @ p["w_qr"]).reshape(b, s, spec.n_h, m.d_hr),
+                        positions, spec.rope_theta)
+    c_kv = rmsnorm(p["kv_norm"], x @ p["w_dkv"], spec.norm_eps)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, spec.n_h, m.d_h)
+    k_rope = apply_rope((x @ p["w_kr"]).reshape(b, s, 1, m.d_hr),
+                        positions, spec.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, (b, s, spec.n_h, m.d_hr))
+    v = (c_kv @ p["w_uv"]).reshape(b, s, spec.n_h, m.d_v)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    return q, k, v
+
+
+def mla_forward(p: Params, spec: ModelSpec, x: jnp.ndarray,
+                positions: jnp.ndarray, *, impl: str = "naive") -> jnp.ndarray:
+    m = spec.mla
+    b, s, _ = x.shape
+    q, k, v = _towers(p, spec, x, positions)
+    scale = (m.d_h + m.d_hr) ** -0.5
+    if impl == "pallas":
+        from repro.kernels import ops as K
+        ctx = K.flash_attention(q, k, v, scale=scale, causal=True)
+    elif impl == "chunked":
+        from .attention import chunked_attention
+        ctx = chunked_attention(q, k, v, scale)
+    else:
+        from .attention import causal_mask, naive_attention
+        ctx = naive_attention(q, k, v, causal_mask(s), scale)
+    return ctx.reshape(b, s, spec.n_h * m.d_v) @ p["w_o"]
+
+
+# ---------------------------------------------------------------------------
+# Decode with compressed-latent cache
+# ---------------------------------------------------------------------------
+
+def init_mla_cache(spec: ModelSpec, n_layers: int, b: int, cache_len: int,
+                   dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    m = spec.mla
+    return {
+        "c_kv": jnp.zeros((n_layers, b, cache_len, m.d_c), dtype),
+        "k_rope": jnp.zeros((n_layers, b, cache_len, m.d_hr), dtype),
+    }
+
+
+def mla_decode(p: Params, spec: ModelSpec, x: jnp.ndarray,
+               c_cache: jnp.ndarray, r_cache: jnp.ndarray,
+               index: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token MLA decode with latent cache.
+
+    x: (b, 1, h);  c_cache: (b, C, d_c);  r_cache: (b, C, d_hr);  index: ().
+    Scores via weight absorption: q_eff = W^UKᵀ q_nope contracts against the
+    cached latent directly; values reconstructed as (probs @ c) W^UV.
+    """
+    m = spec.mla
+    b = x.shape[0]
+    cache_len = c_cache.shape[1]
+    pos = jnp.full((b, 1), index, jnp.int32)
+
+    cq = rmsnorm(p["q_norm"], x @ p["w_dq"], spec.norm_eps)
+    q_nope = (cq @ p["w_uq"]).reshape(b, 1, spec.n_h, m.d_h)
+    q_rope = apply_rope((cq @ p["w_qr"]).reshape(b, 1, spec.n_h, m.d_hr),
+                        pos, spec.rope_theta)
+
+    c_new = rmsnorm(p["kv_norm"], x @ p["w_dkv"], spec.norm_eps)   # (b,1,d_c)
+    r_new = apply_rope((x @ p["w_kr"]).reshape(b, 1, 1, m.d_hr),
+                       pos, spec.rope_theta).reshape(b, 1, m.d_hr)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new, index, axis=1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(r_cache, r_new, index, axis=1)
+
+    # absorb W^UK: (b,1,nh,d_h) x (d_c, nh*d_h) -> (b,1,nh,d_c)
+    w_uk = p["w_uk"].reshape(m.d_c, spec.n_h, m.d_h)
+    q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope, w_uk)
+    s_nope = jnp.einsum("bqhc,bkc->bhqk", q_lat, c_cache)
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope, r_cache)
+    scale = (m.d_h + m.d_hr) ** -0.5
+    scores = (s_nope + s_rope).astype(jnp.float32) * scale
+    valid = jnp.arange(cache_len) <= index
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+
+    ctx_lat = jnp.einsum("bhqk,bkc->bqhc", probs, c_cache)         # (b,1,nh,d_c)
+    w_uv = p["w_uv"].reshape(m.d_c, spec.n_h, m.d_v)
+    ctx = jnp.einsum("bqhc,chd->bqhd", ctx_lat, w_uv)
+    out = ctx.reshape(b, 1, spec.n_h * m.d_v) @ p["w_o"]
+    return out, c_cache, r_cache

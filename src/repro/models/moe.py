@@ -1,0 +1,151 @@
+"""Mixture-of-experts layer (paper §1.1/§3.3/§5.2).
+
+Capacity-based token dispatch, built from sort/scatter primitives so the
+per-device expert buffer is (E, C, h) — shardable on the expert axis (EP over
+the mesh's ``model`` axis) — rather than the (T, E, C) one-hot einsum of
+GShard, which is infeasible at long sequence lengths.
+
+Matches the paper's accounting: balanced load gives E_token = b·s·N_r/N
+tokens per expert (capacity_factor=1.0 reproduces §5.2 exactly; default 1.25
+gives headroom like production routers).  Shared experts process every token
+and are replicated across EP ranks (paper §3.3).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.notation import ModelSpec
+from .layers import Params, dense_init, mlp_apply, mlp_init
+
+
+class MoEOutput(NamedTuple):
+    y: jnp.ndarray
+    aux_loss: jnp.ndarray       # load-balance auxiliary loss
+    router_probs: jnp.ndarray   # (T, E) fp32 (paper keeps 4bsN router acts)
+
+
+def moe_init(key: jax.Array, spec: ModelSpec, dtype=jnp.bfloat16) -> Params:
+    e = spec.moe
+    kr, ke, ks = jax.random.split(key, 3)
+    kg, ku, kd = jax.random.split(ke, 3)
+    E, h, f = e.n_routed, spec.h, e.d_ff_expert
+    p = {
+        "router": dense_init(kr, (h, E), jnp.float32, scale=h ** -0.5),
+        # stacked expert weights: leading dim = expert (EP-sharded)
+        "we_gate": dense_init(kg, (E, h, f), dtype),
+        "we_up": dense_init(ku, (E, h, f), dtype),
+        "we_down": dense_init(kd, (E, f, h), dtype),
+    }
+    if e.n_shared:
+        p["shared"] = mlp_init(ks, spec, f * e.n_shared, dtype)
+    return p
+
+
+def _positions_in_expert(eids: jnp.ndarray, n_expert: int
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """For flat expert assignments (TK,), compute each assignment's rank
+    within its expert and the per-expert totals.
+
+    Sort-based: O(TK log TK) compares.  (A (TK, E) one-hot cumsum is the
+    obvious alternative but XLA lowers it to a reduce-window that both
+    costs and *counts* O(TK²·E) — it dominated the roofline compute term
+    100× over the expert matmuls before this change; see EXPERIMENTS.md
+    §Perf iteration log.)"""
+    tk = eids.shape[0]
+    order = jnp.argsort(eids, stable=True)
+    sorted_eids = eids[order]
+    counts = jnp.zeros((n_expert,), jnp.int32).at[eids].add(1)
+    offsets = jnp.cumsum(counts) - counts              # (E,) group starts
+    pos_sorted = jnp.arange(tk, dtype=jnp.int32) - offsets[sorted_eids]
+    pos = jnp.zeros((tk,), jnp.int32).at[order].set(pos_sorted)
+    return pos, counts
+
+
+def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
+                capacity_factor: float = 1.25,
+                router_impl: str = "softmax") -> MoEOutput:
+    """x: (b, s, h) -> (b, s, h).
+
+    DeepSeek-v3 uses sigmoid scoring + top-k renormalisation; classic top-k
+    softmax also supported (OLMoE/Qwen3 use softmax).
+    """
+    e = spec.moe
+    b, s, h = x.shape
+    T = b * s
+    E, K = e.n_routed, e.n_active
+    xt = x.reshape(T, h)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E) fp32
+    if router_impl == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        gate_vals, eids = jax.lax.top_k(scores, K)
+        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-20)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, eids = jax.lax.top_k(probs, K)
+        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(eids, E, dtype=jnp.float32).sum(1)), axis=0) / K
+    aux = E * jnp.sum(me * ce)
+
+    C = int(max(1, round(T * K / E * capacity_factor)))
+    flat_eids = eids.reshape(T * K)
+    pos, _ = _positions_in_expert(flat_eids, E)
+    keep = (pos < C)
+    pos_c = jnp.minimum(pos, C - 1)
+
+    # dispatch: scatter kept tokens into the (E, C, h) buffer (EP-sharded)
+    src = jnp.repeat(xt, K, axis=0) * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((E, C, h), x.dtype).at[flat_eids, pos_c].add(src)
+
+    # expert FFN (SwiGLU), batched over the expert dim
+    a = jax.nn.silu(jnp.einsum("ech,ehf->ecf", buf, p["we_gate"]))
+    a = a * jnp.einsum("ech,ehf->ecf", buf, p["we_up"])
+    out_buf = jnp.einsum("ecf,efh->ech", a, p["we_down"])
+
+    # combine: gather each assignment's expert output, weight, sum over K
+    y_pairs = out_buf[flat_eids, pos_c] * (gates.reshape(T * K)
+                                           * keep.astype(jnp.float32)
+                                           )[:, None].astype(x.dtype)
+    y = y_pairs.reshape(T, K, h).sum(axis=1)
+
+    if e.n_shared:
+        y = y + mlp_apply(p["shared"], spec, xt)
+    return MoEOutput(y=y.reshape(b, s, h), aux_loss=aux, router_probs=probs)
+
+
+def moe_forward_dense_ref(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
+                          router_impl: str = "softmax") -> jnp.ndarray:
+    """Dropless dense reference: every token runs through its top-k experts
+    via full (T, E) weighting.  O(T·E·h·f) — for tests on tiny sizes only."""
+    e = spec.moe
+    b, s, h = x.shape
+    T = b * s
+    xt = x.reshape(T, h)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    if router_impl == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        gate_vals, eids = jax.lax.top_k(scores, e.n_active)
+        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, eids = jax.lax.top_k(probs, e.n_active)
+        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
+    w = jnp.zeros((T, e.n_routed), jnp.float32)
+    w = w.at[jnp.arange(T)[:, None], eids].set(gates)
+    # per-expert dense pass
+    a = jax.nn.silu(jnp.einsum("th,ehf->etf", xt, p["we_gate"]))
+    a = a * jnp.einsum("th,ehf->etf", xt, p["we_up"])
+    ye = jnp.einsum("etf,efh->eth", a, p["we_down"])       # (E, T, h)
+    y = jnp.einsum("te,eth->th", w.astype(x.dtype), ye)
+    if e.n_shared:
+        y = y + mlp_apply(p["shared"], spec, xt)
+    return y.reshape(b, s, h)

@@ -1,0 +1,165 @@
+"""Recurrent blocks: RWKV6 "Finch" time-mix (data-dependent decay) and the
+Mamba-flavoured head used by Hymba's parallel attn+SSM layers.
+
+TPU adaptation (DESIGN.md §2): the recurrence runs as a `lax.scan` over
+time with the per-head (d_head × state) outer-product state resident in
+registers/VMEM — the TPU-native analogue of RWKV's fused CUDA kernel.  For
+training with long sequences a chunked scan (block-parallel within chunks,
+sequential across) keeps the activation trace O(s/chunk).
+
+Parameter layout matches ``ModelSpec.ssm_params_per_layer`` exactly:
+  r/k/v/g/o projections (5·h·d), decay LoRA (h·64 + 64·d) + per-channel u
+  (d), 6 token-shift mus (6·h), optional depthwise conv (k·d).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.notation import ModelSpec
+from .layers import Params, dense_init
+
+DECAY_RANK = 64
+
+
+def ssm_init(key: jax.Array, spec: ModelSpec, dtype=jnp.bfloat16) -> Params:
+    s = spec.ssm
+    d = spec.h * s.ssm_expand
+    ks = jax.random.split(key, 9)
+    p = {
+        "w_r": dense_init(ks[0], (spec.h, d), dtype),
+        "w_k": dense_init(ks[1], (spec.h, d), dtype),
+        "w_v": dense_init(ks[2], (spec.h, d), dtype),
+        "w_g": dense_init(ks[3], (spec.h, d), dtype),
+        "w_o": dense_init(ks[4], (d, spec.h), dtype),
+        "decay_a": dense_init(ks[5], (spec.h, DECAY_RANK), dtype),
+        "decay_b": dense_init(ks[6], (DECAY_RANK, d), dtype),
+        "u": jnp.zeros((d,), dtype),                      # bonus (first-token)
+        "mu": jnp.full((6, spec.h), 0.5, dtype),          # token-shift mixes
+    }
+    if s.conv_kernel:
+        p["conv"] = dense_init(ks[7], (s.conv_kernel, d), dtype)
+    return p
+
+
+class SSMState(NamedTuple):
+    """Per-layer recurrent state: (b, n_heads, head_dim, state_dim)."""
+    s: jnp.ndarray
+    x_prev: jnp.ndarray   # (b, h) last input (token shift)
+
+
+def init_ssm_state(spec: ModelSpec, n_layers: int, b: int,
+                   state_dtype=jnp.float32,
+                   act_dtype=jnp.bfloat16) -> SSMState:
+    ss = spec.ssm
+    d = spec.h * ss.ssm_expand
+    hd = d // ss.n_ssm_heads
+    return SSMState(
+        s=jnp.zeros((n_layers, b, ss.n_ssm_heads, hd, ss.state_dim),
+                    state_dtype),
+        x_prev=jnp.zeros((n_layers, b, spec.h), act_dtype))
+
+
+def _shift(x: jnp.ndarray, x_prev: jnp.ndarray = None) -> jnp.ndarray:
+    """RWKV token shift: previous timestep's input (zeros / carried state)."""
+    if x_prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([x_prev.astype(x.dtype)[:, None, :], x[:, :-1]],
+                           axis=1)
+
+
+def _mix(x, xs, mu):
+    return x * mu + xs * (1.0 - mu)
+
+
+def _project(p: Params, spec: ModelSpec, x: jnp.ndarray,
+             x_prev: jnp.ndarray = None):
+    """Token-shifted r/k/v/g/w projections reshaped into heads."""
+    ss = spec.ssm
+    d = spec.h * ss.ssm_expand
+    hd = d // ss.n_ssm_heads
+    b, s_len, _ = x.shape
+    xs = _shift(x, x_prev)
+    mu = p["mu"].astype(x.dtype)
+    r = _mix(x, xs, mu[0]) @ p["w_r"]
+    k = _mix(x, xs, mu[1]) @ p["w_k"]
+    v = _mix(x, xs, mu[2]) @ p["w_v"]
+    g = _mix(x, xs, mu[3]) @ p["w_g"]
+    # data-dependent decay (Finch): w_t = exp(-softplus(lora(x)))
+    wlog = (_mix(x, xs, mu[4]) @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jax.nn.softplus(wlog.astype(jnp.float32)))   # (b,s,d) in (0,1)
+    shp = (b, s_len, ss.n_ssm_heads, hd)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            g.reshape(b, s_len, d), w.reshape(shp))
+
+
+def rwkv6_forward(p: Params, spec: ModelSpec, x: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """Training forward, full sequence.  x: (b, s, h) -> (b, s, h).
+
+    State recurrence per head (wkv6):
+      S_t = diag(w_t) S_{t-1} + k_t v_tᵀ        (d_head × state outer product)
+      y_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+    Here head_dim plays the paper's d_h role and state_dim = spec.ssm.state_dim.
+    """
+    ss = spec.ssm
+    b, s_len, _ = x.shape
+    r, k, v, g, w = _project(p, spec, x)
+    hd = r.shape[-1]
+    sd = ss.state_dim
+    # fold value into state_dim-sized chunks: v (b,s,nh,hd) -> treat last dim
+    # as (hd) keys against (sd)-dim values by slicing v to sd dims per head.
+    # RWKV6 proper has hd == sd; where they differ we project v to sd.
+    if hd != sd:
+        v = v[..., :sd] if hd > sd else jnp.pad(v, ((0,0),)*3 + ((0, sd-hd),))
+    u = p["u"].reshape(ss.n_ssm_heads, hd).astype(jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp      # (b,nh,hd),(b,nh,hd),(b,nh,sd),(b,nh,hd)
+        kv = jnp.einsum("bnk,bnv->bnkv", kt, vt)            # outer product
+        yt = jnp.einsum("bnk,bnkv->bnv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, yt
+
+    xs = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+          k.transpose(1, 0, 2, 3).astype(jnp.float32),
+          v.transpose(1, 0, 2, 3).astype(jnp.float32),
+          w.transpose(1, 0, 2, 3))
+    S0 = jnp.zeros((b, ss.n_ssm_heads, hd, sd), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s_len, ss.n_ssm_heads * sd)
+    d = spec.h * ss.ssm_expand
+    if y.shape[-1] != d:   # sd != hd: map back up to d
+        y = jnp.pad(y, ((0, 0), (0, 0), (0, d - y.shape[-1])))
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    return y @ p["w_o"]
+
+
+def rwkv6_decode(p: Params, spec: ModelSpec, x: jnp.ndarray,
+                 state: jnp.ndarray, x_prev: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode. x: (b,1,h); state: (b,nh,hd,sd); x_prev: (b,h).
+    O(1) in context length — why rwkv6/hymba run long_500k natively."""
+    ss = spec.ssm
+    b = x.shape[0]
+    r, k, v, g, w = _project(p, spec, x, x_prev=x_prev)
+    hd, sd = r.shape[-1], ss.state_dim
+    if hd != sd:
+        v = v[..., :sd] if hd > sd else jnp.pad(v, ((0,0),)*3 + ((0, sd-hd),))
+    u = p["u"].reshape(ss.n_ssm_heads, hd).astype(jnp.float32)
+    rt = r[:, 0].astype(jnp.float32)
+    kt = k[:, 0].astype(jnp.float32)
+    vt = v[:, 0].astype(jnp.float32)
+    wt = w[:, 0]
+    kv = jnp.einsum("bnk,bnv->bnkv", kt, vt)
+    yt = jnp.einsum("bnk,bnkv->bnv", rt, state + u[None, :, :, None] * kv)
+    state = wt[..., None] * state + kv
+    y = yt.reshape(b, 1, ss.n_ssm_heads * sd)
+    d = spec.h * ss.ssm_expand
+    if y.shape[-1] != d:
+        y = jnp.pad(y, ((0, 0), (0, 0), (0, d - y.shape[-1])))
+    y = y.astype(x.dtype) * jax.nn.silu(g)
+    return y @ p["w_o"], state, x[:, 0]

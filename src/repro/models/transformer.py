@@ -1,0 +1,211 @@
+"""Transformer block composition and the scan-over-layers stack.
+
+Layers are stored as *stacked* pytrees (leading axis = layer) and executed
+with ``jax.lax.scan`` so XLA compiles one block body regardless of depth —
+essential for the 80/94-layer dry-runs — with the activation-recomputation
+policy applied to the scanned body (``jax.checkpoint``), exactly the knob
+the paper's §5 analyses (AC None / Full / Selective).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.notation import AttentionKind, FamilyKind, ModelSpec
+from repro.core.parallel_config import RecomputePolicy
+from . import attention as A
+from . import mla as M
+from . import moe as E
+from . import ssm as S
+from .layers import Params, mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelOptions:
+    attn_impl: str = "naive"          # "naive" | "chunked" (flash-style)
+    capacity_factor: float = 1.25
+    recompute: RecomputePolicy = RecomputePolicy.NONE
+    use_pallas: bool = False          # route hot ops through Pallas kernels
+    router_impl: str = "softmax"      # "softmax" | "sigmoid" (deepseek-v3)
+    # scan (compile-once) vs python-loop (unrolled) over layers.  Unrolled is
+    # used by the roofline cost probes: XLA's cost_analysis counts a while
+    # body ONCE regardless of trip count, so per-layer costs must be probed
+    # on unrolled modules and composed analytically (benchmarks/roofline.py).
+    scan_layers: bool = True
+    # "scatter" (GSPMD, default) | "a2a" (shard_map all-to-all EP dispatch —
+    # the beyond-paper collective optimization; needs an active mesh with a
+    # 'model' axis dividing n_routed).
+    moe_impl: str = "scatter"
+    # paper §5 partial recompute: fraction of each stack the policy covers
+    # (the leading layers); the rest run AC-None.
+    recompute_fraction: float = 1.0
+
+
+def _remat(fn: Callable, policy: RecomputePolicy) -> Callable:
+    if policy == RecomputePolicy.FULL:
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    if policy == RecomputePolicy.SELECTIVE:
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def _norm(p, x, spec: ModelSpec, opts: Optional[ModelOptions] = None):
+    gemma = spec.name.startswith("gemma")
+    if opts is not None and opts.use_pallas:
+        from repro.kernels import ops as K
+        return K.rmsnorm(x, p["scale"], eps=spec.norm_eps, gemma_style=gemma)
+    return rmsnorm(p, x, spec.norm_eps, gemma_style=gemma)
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply (one layer; callers vmap/scan over stacks)
+# ---------------------------------------------------------------------------
+
+def block_init(key: jax.Array, spec: ModelSpec, is_moe_layer: bool,
+               dtype=jnp.bfloat16, cross_attn: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"ln1": rmsnorm_init(spec.h, dtype),
+                 "ln2": rmsnorm_init(spec.h, dtype)}
+    if spec.attention == AttentionKind.MLA:
+        p["attn"] = M.mla_init(ks[0], spec, dtype)
+    elif spec.attention != AttentionKind.NONE:
+        p["attn"] = A.gqa_init(ks[0], spec, dtype)
+    if spec.ssm is not None:
+        p["ssm"] = S.ssm_init(ks[1], spec, dtype)
+        if spec.family == FamilyKind.HYBRID:
+            p["merge_norm"] = rmsnorm_init(spec.h, dtype)
+    if is_moe_layer:
+        p["moe"] = E.moe_init(ks[2], spec, dtype)
+    elif spec.h_ff:
+        p["mlp"] = mlp_init(ks[3], spec, spec.h_ff, dtype)
+    if cross_attn:
+        p["ln_x"] = rmsnorm_init(spec.h, dtype)
+        p["xattn"] = A.gqa_init(ks[4], spec, dtype)
+    return p
+
+
+def block_apply(p: Params, spec: ModelSpec, opts: ModelOptions,
+                x: jnp.ndarray, positions: jnp.ndarray,
+                is_moe_layer: bool,
+                enc_out: Optional[jnp.ndarray] = None,
+                window: Optional[int] = None,
+                causal: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One transformer layer; returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(p["ln1"], x, spec, opts)
+    attn_impl = "pallas" if (opts.use_pallas and causal) else opts.attn_impl
+
+    mix = None
+    if spec.attention == AttentionKind.MLA:
+        mix = M.mla_forward(p["attn"], spec, h, positions, impl=attn_impl)
+    elif spec.attention != AttentionKind.NONE:
+        if causal:
+            mix = A.gqa_forward(p["attn"], spec, h, positions,
+                                impl=attn_impl, window=window)
+        else:  # encoder self-attention: bidirectional naive
+            q, k, v = A._qkv(p["attn"], spec, h, positions)
+            k = A._repeat_kv(k, spec.n_h // spec.n_kv)
+            v = A._repeat_kv(v, spec.n_h // spec.n_kv)
+            full = jnp.ones((h.shape[1], h.shape[1]), bool)
+            ctx = A.naive_attention(q, k, v, full, spec.d_head ** -0.5)
+            b, s = h.shape[:2]
+            mix = ctx.reshape(b, s, spec.n_h * spec.d_head) @ p["attn"]["wo"]
+
+    if spec.ssm is not None:
+        ssm_out = S.rwkv6_forward(p["ssm"], spec, h)
+        if spec.family == FamilyKind.HYBRID and mix is not None:
+            # Hymba: parallel attention + SSM heads, normalised then averaged
+            mix = 0.5 * (mix + _norm(p["merge_norm"], ssm_out, spec))
+        else:
+            mix = ssm_out
+    x = x + mix
+
+    if enc_out is not None:                      # decoder cross-attention
+        hx = _norm(p["ln_x"], x, spec)
+        q = (hx @ p["xattn"]["wq"]).reshape(
+            hx.shape[0], hx.shape[1], spec.n_h, spec.d_head)
+        k = (enc_out @ p["xattn"]["wk"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], spec.n_kv, spec.d_head)
+        v = (enc_out @ p["xattn"]["wv"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], spec.n_kv, spec.d_head)
+        k = A._repeat_kv(k, spec.n_h // spec.n_kv)
+        v = A._repeat_kv(v, spec.n_h // spec.n_kv)
+        full = jnp.ones((hx.shape[1], enc_out.shape[1]), bool)
+        ctx = A.naive_attention(q, k, v, full, spec.d_head ** -0.5)
+        x = x + ctx.reshape(hx.shape[0], hx.shape[1],
+                            spec.n_h * spec.d_head) @ p["xattn"]["wo"]
+
+    h2 = _norm(p["ln2"], x, spec, opts)
+    if is_moe_layer:
+        from repro.parallel.axes import current_mesh
+        mesh = current_mesh()
+        if opts.moe_impl == "a2a" and mesh is not None \
+                and "model" in mesh.axis_names:
+            from .moe_a2a import moe_forward_a2a
+            out = moe_forward_a2a(p["moe"], spec, h2, mesh=mesh,
+                                  capacity_factor=opts.capacity_factor,
+                                  router_impl=opts.router_impl)
+        else:
+            out = E.moe_forward(p["moe"], spec, h2,
+                                capacity_factor=opts.capacity_factor,
+                                router_impl=opts.router_impl)
+        x = x + out.y
+        aux = aux + out.aux_loss
+    elif spec.h_ff:
+        x = x + mlp_apply(p["mlp"], spec, h2)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Stacked layer groups
+# ---------------------------------------------------------------------------
+
+def stack_init(key: jax.Array, spec: ModelSpec, n: int, is_moe: bool,
+               dtype=jnp.bfloat16, cross_attn: bool = False) -> Params:
+    if n == 0:
+        return {}
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block_init(k, spec, is_moe, dtype,
+                                         cross_attn=cross_attn))(keys)
+
+
+def stack_apply(params: Params, spec: ModelSpec, opts: ModelOptions,
+                x: jnp.ndarray, positions: jnp.ndarray, is_moe: bool,
+                enc_out: Optional[jnp.ndarray] = None,
+                window: Optional[int] = None,
+                causal: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """scan over the stacked layer group with the remat policy applied."""
+    if not params:
+        return x, jnp.zeros((), jnp.float32)
+
+    def body(carry, layer_p):
+        xc, aux = carry
+        xc, a = block_apply(layer_p, spec, opts, xc, positions, is_moe,
+                            enc_out=enc_out, window=window, causal=causal)
+        return (xc, aux + a), None
+
+    n = jax.tree.leaves(params)[0].shape[0]
+    n_rc = int(round(opts.recompute_fraction * n)) \
+        if opts.recompute != RecomputePolicy.NONE else n
+    body_rc = _remat(body, opts.recompute)
+    carry = (x, jnp.zeros((), jnp.float32))
+    if opts.scan_layers and (n_rc in (0, n)):
+        (x, aux), _ = jax.lax.scan(body_rc if n_rc else body, carry, params)
+    elif opts.scan_layers:
+        # partial recompute: two scans — first n_rc layers remat, rest not
+        head = jax.tree.map(lambda a: a[:n_rc], params)
+        tail = jax.tree.map(lambda a: a[n_rc:], params)
+        carry, _ = jax.lax.scan(body_rc, carry, head)
+        (x, aux), _ = jax.lax.scan(body, carry, tail)
+    else:
+        for i in range(n):
+            layer_p = jax.tree.map(lambda a: a[i], params)
+            carry, _ = (body_rc if i < n_rc else body)(carry, layer_p)
+        x, aux = carry
+    return x, aux

@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, TrainState, adamw_update, init_train_state
+
+__all__ = ["AdamWConfig", "TrainState", "adamw_update", "init_train_state"]

@@ -1,0 +1,89 @@
+"""AdamW with the paper's exact mixed-precision state layout (Table 7):
+
+  weights   BF16  (2 B)   — the live parameters used by forward/backward
+  gradients FP32  (4 B)   — the accumulation buffer across micro-batches
+  optimizer:
+    master copy  FP32 (4 B)
+    momentum     BF16 (2 B)
+    variance     BF16 (2 B)
+
+Total optimizer bytes/param = 8, matching §4's ZeRO arithmetic.  ZeRO
+sharding of {master, m, v} (stage os), + grads (os+g), + params
+(os+g+params) is applied by the launcher through output shardings — the
+math here is sharding-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray          # () int32
+    params: PyTree             # bf16 live weights
+    master: PyTree             # fp32 copy (optimizer)
+    m: PyTree                  # bf16 momentum
+    v: PyTree                  # bf16 variance
+
+
+def init_train_state(params: PyTree) -> TrainState:
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        master=jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        m=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.bfloat16), params),
+        v=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.bfloat16), params),
+    )
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(state: TrainState, grads: PyTree, cfg: AdamWConfig
+                 ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+    """grads: fp32 pytree (the Table-7 accumulation buffer)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-12))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * clip
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mh = m32 / bc1
+        vh = v32 / bc2
+        new_master = master - cfg.lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                        + cfg.weight_decay * master)
+        return (m32.astype(jnp.bfloat16), v32.astype(jnp.bfloat16), new_master)
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    new_m = jax.tree.map(lambda x: x[0], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda x: x[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree.map(lambda x: x[2], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda mp: mp.astype(jnp.bfloat16), new_master)
+    return TrainState(step=step, params=new_params, master=new_master,
+                      m=new_m, v=new_v), {"grad_norm": gnorm}

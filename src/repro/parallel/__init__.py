@@ -1,0 +1,5 @@
+from .axes import (axis_rules, logical_constraint, logical_sharding,
+                   param_partition_spec, current_mesh)
+
+__all__ = ["axis_rules", "logical_constraint", "logical_sharding",
+           "param_partition_spec", "current_mesh"]

@@ -1,0 +1,109 @@
+"""Logical-axis sharding (MaxText-style).
+
+Model code annotates tensors with *logical* axis names ("batch", "seq",
+"vocab", "heads", "ff", "expert", ...).  A context (mesh + rules) maps the
+logical names to physical mesh axes; outside any context the annotations are
+no-ops, so the same model runs single-device smoke tests and 512-chip
+dry-runs unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+_state = threading.local()
+
+# Default mapping for the production meshes (see launch/mesh.py):
+#   single-pod (16,16) axes ("data","model"); multi-pod (2,16,16) adds "pod".
+# The "pod" axis extends data parallelism (DP-major, the paper's DP·EDP
+# grouping); "model" carries TP + EP (+ SP for sequence-resident tensors).
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,            # hidden/residual dim replicated
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",           # fused head*dim columns
+    "ff": "model",
+    "expert": "model",
+    "expert_ff": None,        # ETP axis (ETP=1 in the paper's case study)
+    "cache_seq": None,
+    "dp_shard": ("pod", "data"),   # ZeRO sharding axis for state pytrees
+    "conv": None,
+    "lowrank": None,
+    "stage": None,            # PP stage axis (analytical; optional "pod")
+}
+
+
+def _get() -> Tuple[Optional[Mesh], Rules]:
+    mesh = getattr(_state, "mesh", None)
+    rules = getattr(_state, "rules", DEFAULT_RULES)
+    return mesh, rules
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Optional[Rules] = None):
+    """Activate a mesh + logical-rule mapping for model annotations."""
+    prev = getattr(_state, "mesh", None), getattr(_state, "rules", DEFAULT_RULES)
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _resolve(axes: Sequence[Optional[str]], mesh: Mesh, rules: Rules) -> P:
+    phys = []
+    used = set()
+    for a in axes:
+        if a is None:
+            phys.append(None)
+            continue
+        m = rules.get(a)
+        if m is None:
+            phys.append(None)
+            continue
+        names = (m,) if isinstance(m, str) else tuple(m)
+        names = tuple(n for n in names if n in mesh.axis_names and n not in used)
+        used.update(names)
+        phys.append(names if len(names) > 1 else (names[0] if names else None))
+    return P(*phys)
+
+
+def logical_sharding(axes: Sequence[Optional[str]],
+                     mesh: Optional[Mesh] = None,
+                     rules: Optional[Rules] = None) -> Optional[NamedSharding]:
+    m, r = _get()
+    mesh = mesh or m
+    rules = dict(DEFAULT_RULES, **(rules or {})) if rules else r
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, _resolve(axes, mesh, rules))
+
+
+def param_partition_spec(axes: Sequence[Optional[str]], mesh: Mesh,
+                         rules: Optional[Rules] = None) -> P:
+    return _resolve(axes, mesh, dict(DEFAULT_RULES, **(rules or {})))
+
+
+def logical_constraint(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint under an active mesh; identity otherwise."""
+    mesh, rules = _get()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _resolve(axes, mesh, rules)))
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _get()[0]

@@ -1,0 +1,188 @@
+"""Parameter/state sharding rules: pytree path → logical axes → PartitionSpec.
+
+Implements the paper's §3 partitioning on the TPU mesh:
+  * Megatron-TP of attention & dense MLP  → ``model`` axis
+  * MLA: W^UQ/W^UK/W^UV/W^O split, W^DQ/W^DKV/W^QR/W^KR replicated (§3.2)
+  * EP: routed experts sharded on the expert dim; shared expert replicated
+    (§3.3); ETP=1 → expert matrices unsplit internally
+  * ZeRO (§4): optimizer state (os), gradients (os+g), parameters
+    (os+g+params) additionally sharded across the data(+pod) axes — the
+    GSPMD equivalent of DeepSpeed's DP-group partitioning.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.parallel_config import ZeROStage
+from .axes import DEFAULT_RULES, param_partition_spec
+
+PyTree = Any
+
+# leaf-name → logical axes (stacked-layer leading dim handled separately)
+_ATTN_RULES = {
+    "wq": ("embed", "qkv"), "wk": ("embed", "qkv"), "wv": ("embed", "qkv"),
+    "wo": ("qkv", "embed"),
+    "bq": ("qkv",), "bk": ("qkv",), "bv": ("qkv",),
+    "w_dq": ("embed", None), "w_uq": (None, "qkv"), "w_qr": (None, "qkv"),
+    "w_dkv": ("embed", None), "w_uk": (None, "qkv"), "w_uv": (None, "qkv"),
+    "w_kr": ("embed", None), "w_o": ("qkv", "embed"),
+}
+_SSM_RULES = {
+    "w_r": ("embed", "ff"), "w_k": ("embed", "ff"), "w_v": ("embed", "ff"),
+    "w_g": ("embed", "ff"), "w_o": ("ff", "embed"),
+    "decay_a": ("embed", None), "decay_b": (None, "ff"),
+    "u": ("ff",), "mu": (None, None), "conv": (None, "ff"),
+}
+_MLP_RULES = {
+    "gate": ("embed", "ff"), "up": ("embed", "ff"), "down": ("ff", "embed"),
+    "fc1": ("embed", "ff"), "fc2": ("ff", "embed"),
+}
+_MOE_RULES = {
+    "router": ("embed", None),
+    "we_gate": ("expert", None, "expert_ff"),
+    "we_up": ("expert", None, "expert_ff"),
+    "we_down": ("expert", "expert_ff", None),
+}
+
+
+def _leaf_axes(path: Tuple[str, ...], ndim: int) -> Tuple[Optional[str], ...]:
+    keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = keys[-1]
+    parents = set(keys[:-1])
+
+    if "embed" in parents:
+        return ("vocab", "embed")
+    if "head" in parents:
+        return ("embed", "vocab")
+    if name == "scale":                        # any norm
+        base: Tuple[Optional[str], ...] = ("embed",)
+    elif "moe" in parents and name in _MOE_RULES:
+        base = _MOE_RULES[name]
+    elif ("shared" in parents or "mlp" in parents) and name in _MLP_RULES:
+        base = _MLP_RULES[name]
+    elif "ssm" in parents and name in _SSM_RULES:
+        base = _SSM_RULES[name]
+    elif name in _ATTN_RULES:                  # attn / xattn
+        base = _ATTN_RULES[name]
+    elif name in _MLP_RULES:
+        base = _MLP_RULES[name]
+    else:
+        base = (None,) * ndim
+    # stacked layer groups carry a leading layer dim
+    if ndim == len(base) + 1:
+        return (None,) + tuple(base)
+    if ndim == len(base):
+        return tuple(base)
+    # e.g. vmapped extra dims: pad with None in front
+    return (None,) * (ndim - len(base)) + tuple(base)
+
+
+def _drop_indivisible(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Replicate any dim whose size isn't divisible by its mesh-axes product
+    (e.g. hymba's vocab=32001)."""
+    entries = []
+    for dim, e in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if e is None:
+            entries.append(None)
+            continue
+        ns = (e,) if isinstance(e, str) else tuple(e)
+        size = int(np.prod([mesh.shape[n] for n in ns]))
+        entries.append(e if dim % size == 0 else None)
+    return P(*entries)
+
+
+def param_specs(params: PyTree, mesh: Mesh, rules=None) -> PyTree:
+    """PartitionSpec pytree mirroring ``params`` (abstract or concrete)."""
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        axes = _leaf_axes(path, getattr(leaf, "ndim", len(shape)))
+        return _drop_indivisible(
+            param_partition_spec(axes, mesh, rules), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def _dims_ok(shape: Sequence[int], spec: P, mesh: Mesh) -> bool:
+    for dim, names in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if names is None:
+            continue
+        ns = (names,) if isinstance(names, str) else names
+        size = int(np.prod([mesh.shape[n] for n in ns]))
+        if dim % size:
+            return False
+    return True
+
+
+def add_dp_axes(spec: P, shape: Sequence[int], mesh: Mesh,
+                dp_axes: Sequence[str] = ("pod", "data")) -> P:
+    """ZeRO: extend ``spec`` with the data(+pod) axes on the first dimension
+    where the result stays legal (divisible, axes unused).  Falls back to the
+    original spec when nothing fits (tiny tensors stay replicated — same as
+    DeepSpeed's small-tensor handling)."""
+    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    if not dp_axes:
+        return spec
+    entries = list(tuple(spec) + (None,) * (len(shape) - len(spec)))
+    used = set()
+    for e in entries:
+        if e is None:
+            continue
+        used.update((e,) if isinstance(e, str) else e)
+    if any(a in used for a in dp_axes):
+        return spec
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        existing = () if e is None else ((e,) if isinstance(e, str) else tuple(e))
+        ex_size = int(np.prod([mesh.shape[n] for n in existing])) if existing else 1
+        if dim % (ex_size * dp_size) == 0:
+            entries[i] = tuple(existing) + dp_axes
+            return P(*entries)
+    return spec
+
+
+def state_shardings(abstract_state, mesh: Mesh, zero: ZeROStage,
+                    rules=None):
+    """NamedSharding trees for a TrainState (params, master/m/v, step).
+
+    params follow §3 TP/EP rules; {master, m, v} additionally DP-sharded for
+    zero >= os; params DP-sharded for os+g+params.
+    """
+    from repro.optim.adamw import TrainState
+
+    pspecs = param_specs(abstract_state.params, mesh, rules)
+    shapes = jax.tree.map(lambda a: a.shape, abstract_state.params)
+
+    def shard(spec_tree, with_dp):
+        def one(spec, shape):
+            s = add_dp_axes(spec, shape, mesh) if with_dp else spec
+            return NamedSharding(mesh, s)
+        return jax.tree.map(one, spec_tree, shapes)
+
+    zp = zero == ZeROStage.OS_G_PARAMS
+    zo = zero != ZeROStage.NONE
+    return TrainState(
+        step=NamedSharding(mesh, P()),
+        params=shard(pspecs, zp),
+        master=shard(pspecs, zo),
+        m=shard(pspecs, zo),
+        v=shard(pspecs, zo),
+    )
+
+
+def grad_shardings(abstract_params, mesh: Mesh, zero: ZeROStage, rules=None):
+    """fp32 gradient-buffer shardings (DP-sharded for zero >= os+g)."""
+    pspecs = param_specs(abstract_params, mesh, rules)
+    shapes = jax.tree.map(lambda a: a.shape, abstract_params)
+    with_dp = zero in (ZeROStage.OS_G, ZeROStage.OS_G_PARAMS)
+
+    def one(spec, shape):
+        s = add_dp_axes(spec, shape, mesh) if with_dp else spec
+        return NamedSharding(mesh, s)
+
+    return jax.tree.map(one, pspecs, shapes)

@@ -1,0 +1,3 @@
+from .decode import ServeConfig, make_serve_step, serve_requests
+
+__all__ = ["ServeConfig", "make_serve_step", "serve_requests"]

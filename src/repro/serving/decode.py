@@ -1,0 +1,72 @@
+"""Serving: batched single-token decode over a KV/latent/SSM cache.
+
+``make_serve_step`` builds the jit-able step the decode-shape dry-runs
+lower: one new token per sequence against a cache of ``cache_len`` tokens.
+``serve_requests`` is a small batched-request driver (greedy or sampled)
+used by the serving example and integration tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 = greedy
+    eos_id: Optional[int] = None
+
+
+def make_serve_step(model: Model) -> Callable[[PyTree, PyTree, jnp.ndarray],
+                                              Tuple[jnp.ndarray, PyTree]]:
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return serve_step
+
+
+def prefill(model: Model, params: PyTree, cache: PyTree,
+            prompt: jnp.ndarray) -> Tuple[PyTree, jnp.ndarray]:
+    """Sequential prefill through decode_step (token-by-token; simple and
+    cache-layout-exact).  prompt: (b, s)."""
+    step = jax.jit(model.decode_step)
+    logits = None
+    for i in range(prompt.shape[1]):
+        logits, cache = step(params, cache, prompt[:, i:i + 1])
+    return cache, logits
+
+
+def serve_requests(model: Model, params: PyTree, prompts: jnp.ndarray,
+                   cfg: ServeConfig, cache_len: int,
+                   enc_out: Optional[jnp.ndarray] = None,
+                   rng: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Greedy/sampled continuation for a batch of prompts: (b, s) -> (b, n)."""
+    b = prompts.shape[0]
+    cache = model.init_cache(b, cache_len, enc_out=enc_out)
+    cache, logits = prefill(model, params, cache, prompts)
+    step = jax.jit(model.decode_step)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    out = []
+    tok = None
+    for i in range(cfg.max_new_tokens):
+        if tok is None:
+            lg = logits
+        else:
+            lg, cache = step(params, cache, tok)
+        lg = lg[:, -1].astype(jnp.float32)
+        if cfg.temperature > 0:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(k, lg / cfg.temperature)[:, None]
+        else:
+            tok = lg.argmax(-1)[:, None]
+        tok = tok.astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,58 @@
+"""Exactness tests for paper §5 Table 10 activation formulas.
+
+The paper gives closed forms for a 4-layer PP stage at TP2@SP2@CP1@EP8:
+  MLA  AC-None : 10bsh + 8bs(d_cq+d_c) + 16bs d_h n_h + 8bs d_hr n_h + 10 b n_h s^2
+  MLA  AC-Full : 4bsh
+  MoE  AC-None : 20bsh + 16bsN + 8bsN_r + 4bs N_r/N (96h + 256h_E) + 32bs h_E
+  MoE  AC-Full : 4bsh + 8bsN_r
+We evaluate our symbolic model at the paper's settings and compare.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_spec
+from repro.core.activations import table10
+from repro.core.parallel_config import PAPER_CONFIG
+
+SPEC = get_spec("deepseek-v3")
+
+H, HE = 7168, 2048
+DCQ, DC = 1536, 512
+DH, DHR, NH = 128, 64, 128
+N, NR = 256, 8
+S = 4096
+
+
+def paper_mla_none(b, s=S):
+    return (10 * b * s * H + 8 * b * s * (DCQ + DC) + 16 * b * s * DH * NH
+            + 8 * b * s * DHR * NH + 10 * b * NH * s * s)
+
+
+def paper_moe_none(b, s=S):
+    return (20 * b * s * H + 16 * b * s * N + 8 * b * s * NR
+            + 4 * b * s * NR // N * (96 * H + 256 * HE) + 32 * b * s * HE)
+
+
+@pytest.mark.parametrize("b", [1, 2, 4])
+def test_table10_ac_none(b):
+    cfg = dataclasses.replace(PAPER_CONFIG, micro_batch=b)
+    t = table10(SPEC, cfg)["none"]
+    assert t["MLA"] == paper_mla_none(b)
+    assert t["MoE"] == paper_moe_none(b)
+    assert t["Total"] == paper_mla_none(b) + paper_moe_none(b)
+
+
+@pytest.mark.parametrize("b", [1, 2, 4])
+def test_table10_ac_full(b):
+    cfg = dataclasses.replace(PAPER_CONFIG, micro_batch=b)
+    t = table10(SPEC, cfg)["full"]
+    assert t["MLA"] == 4 * b * S * H
+    assert t["MoE"] == 4 * b * S * H + 8 * b * S * NR
+    assert t["Total"] == 8 * b * S * H + 8 * b * S * NR
+
+
+def test_scores_term_magnitude():
+    # at b=1, s=4096 the 10 b n_h s^2 term is ~20 GiB — dominates; sanity-check
+    assert 10 * 1 * NH * S * S == 21_474_836_480

@@ -1,0 +1,81 @@
+"""launch.specs unit tests: input shapes, skip logic, cache placement."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED, get_spec
+from repro.launch.specs import (SHAPES, SLIDING_WINDOW_LONG, batch_specs,
+                                cache_divisor, cache_placement, input_specs,
+                                shape_skip_reason, spec_for_shape)
+
+
+def test_shapes_pool_exact():
+    assert SHAPES["train_4k"] == dict(kind="train", seq=4096, batch=256)
+    assert SHAPES["prefill_32k"] == dict(kind="prefill", seq=32768, batch=32)
+    assert SHAPES["decode_32k"] == dict(kind="decode", seq=32768, batch=128)
+    assert SHAPES["long_500k"] == dict(kind="decode", seq=524288, batch=1)
+
+
+def test_skip_only_whisper_long():
+    skips = [(a, s) for a in ASSIGNED for s in SHAPES
+             if shape_skip_reason(get_spec(a), s)]
+    assert skips == [("whisper-tiny", "long_500k")]
+
+
+def test_long_500k_variants():
+    # SSM/hybrid run natively; dense/MoE/VLM get the sliding window
+    assert spec_for_shape(get_spec("rwkv6-1.6b"), "long_500k").sliding_window is None
+    assert spec_for_shape(get_spec("hymba-1.5b"), "long_500k").sliding_window is None
+    for a in ("gemma-2b", "qwen2-vl-72b", "olmoe-1b-7b"):
+        v = spec_for_shape(get_spec(a), "long_500k")
+        assert v.sliding_window == SLIDING_WINDOW_LONG
+    # other shapes unmodified
+    assert spec_for_shape(get_spec("gemma-2b"), "decode_32k").sliding_window is None
+
+
+def test_batch_specs_frontend_stubs():
+    vl = batch_specs(get_spec("qwen2-vl-72b"), 4, 1024)
+    assert "vision_embeds" in vl
+    assert vl["vision_embeds"].shape == (4, 256, 8192)
+    wh = batch_specs(get_spec("whisper-tiny"), 4, 128)
+    assert wh["audio_embeds"].shape == (4, 1500, 384)
+    dense = batch_specs(get_spec("gemma-2b"), 4, 128)
+    assert set(dense) == {"tokens"}
+
+
+def test_decode_input_specs_cache_len():
+    ins = input_specs(get_spec("qwen2-1.5b"), "decode_32k")
+    k = ins["cache"]["kv"]["k"]
+    assert k.shape == (28, 128, 32768, 2, 128)
+    assert ins["tokens"].shape == (128, 1)
+    # long_500k sliding window caps the cache
+    ins = input_specs(get_spec("qwen2-1.5b"), "long_500k")
+    assert ins["cache"]["kv"]["k"].shape[2] == SLIDING_WINDOW_LONG
+
+
+def test_cache_placement_prefers_heads_then_seq():
+    # kv heads divisible -> heads sharded
+    assert cache_placement((28, 128, 32768, 16, 128), 16, 16) == \
+        (None, "batch", None, "model", None)
+    # kv heads NOT divisible -> seq sharded (hillclimb 3 lesson)
+    assert cache_placement((28, 128, 32768, 2, 128), 16, 16) == \
+        (None, "batch", "model", None, None)
+    # b=1 long-context: context-parallel batch on seq, model moves on
+    p = cache_placement((28, 1, 8192, 2, 128), 16, 16)
+    assert p[1] is None and p[2] == "batch"
+    # scalar / index leaves
+    assert cache_placement((), 16, 16) == ()
+
+
+def test_cache_divisor_consistency():
+    shape = (28, 128, 32768, 16, 128)
+    assert cache_divisor(shape, 16, 16) == 256
+    assert cache_divisor((28, 1, 8192, 2, 128), 16, 16) >= 16
+
+
+def test_pp_in_flight_microbatches_scale_activation():
+    from repro.core import PAPER_CONFIG, stage_activation_bytes
+    spec = get_spec("deepseek-v3")
+    a1 = stage_activation_bytes(spec, PAPER_CONFIG, in_flight=1)
+    a16 = stage_activation_bytes(spec, PAPER_CONFIG, in_flight=16)
+    assert a16 == 16 * a1   # 1F1B worst-case residency multiplier

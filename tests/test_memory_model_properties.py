@@ -1,0 +1,136 @@
+"""Property-based tests (hypothesis) on the analytical memory model's
+invariants — the system's core correctness surface."""
+
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_spec
+from repro.core import (PAPER_CONFIG, ParallelConfig, RecomputePolicy,
+                        ZeROStage, estimate_memory, stage_activation_bytes,
+                        table4_stages, total_params_paper, zero_memory)
+from repro.core.params import device_params, layer_params_paper
+
+SPEC = get_spec("deepseek-v3")
+SPECS = [get_spec(a) for a in
+         ("deepseek-v3", "olmoe-1b-7b", "gemma-2b", "qwen2-1.5b",
+          "qwen3-moe-235b-a22b", "rwkv6-1.6b", "hymba-1.5b")]
+
+
+def cfg_strategy():
+    return st.builds(
+        lambda dp, tp, pp, ep, b, z, r, sp: ParallelConfig(
+            dp=dp, tp=tp, pp=pp, ep=ep, etp=1, sp=sp, zero=z, recompute=r,
+            micro_batch=b, seq_len=4096),
+        dp=st.sampled_from([8, 16, 32, 64]),
+        tp=st.sampled_from([1, 2, 4]),
+        pp=st.sampled_from([1, 2, 4, 8, 16]),
+        ep=st.sampled_from([1, 2, 4, 8]),
+        b=st.sampled_from([1, 2, 4]),
+        z=st.sampled_from(list(ZeROStage)),
+        r=st.sampled_from(list(RecomputePolicy)),
+        sp=st.booleans(),
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(cfg=cfg_strategy())
+def test_pp_stages_partition_all_params(cfg):
+    """Σ per-stage params == total params, for every PP degree."""
+    for spec in SPECS:
+        if cfg.pp > spec.n_layers:
+            continue
+        stages = table4_stages(spec, cfg.pp)
+        assert sum(r.params for r in stages) == \
+            sum(layer_params_paper(spec, i) for i in range(spec.n_layers))
+        assert sum(len(r.layers) for r in stages) == spec.n_layers
+
+
+@settings(max_examples=60, deadline=None)
+@given(cfg=cfg_strategy())
+def test_zero_monotonicity(cfg):
+    """Each successive ZeRO stage uses <= memory (params+grads+opt)."""
+    order = [ZeROStage.NONE, ZeROStage.OS, ZeROStage.OS_G,
+             ZeROStage.OS_G_PARAMS]
+    for spec in SPECS:
+        if cfg.pp > spec.n_layers:
+            continue
+        if spec.is_moe and spec.moe.n_routed % cfg.ep:
+            continue
+        totals = [zero_memory(spec, dataclasses.replace(cfg, zero=z)).total
+                  for z in order]
+        assert totals == sorted(totals, reverse=True), (spec.name, totals)
+
+
+@settings(max_examples=60, deadline=None)
+@given(cfg=cfg_strategy())
+def test_recompute_reduces_activation_memory(cfg):
+    """FULL <= SELECTIVE <= NONE activation bytes."""
+    for spec in SPECS:
+        if cfg.pp > spec.n_layers:
+            continue
+        if spec.is_moe and spec.moe.n_routed % cfg.ep:
+            continue
+        vals = {}
+        for r in RecomputePolicy:
+            c = dataclasses.replace(cfg, recompute=r)
+            vals[r] = stage_activation_bytes(spec, c)
+        assert vals[RecomputePolicy.FULL] <= vals[RecomputePolicy.SELECTIVE] \
+            <= vals[RecomputePolicy.NONE], (spec.name, vals)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg=cfg_strategy(), scale=st.sampled_from([2, 4]))
+def test_activation_memory_linear_in_batch(cfg, scale):
+    """Doubling micro-batch scales activation bytes exactly linearly
+    (all terms are linear in b)."""
+    for spec in SPECS:
+        if cfg.pp > spec.n_layers:
+            continue
+        if spec.is_moe and spec.moe.n_routed % cfg.ep:
+            continue
+        a1 = stage_activation_bytes(spec, cfg)
+        c2 = dataclasses.replace(cfg, micro_batch=cfg.micro_batch * scale)
+        a2 = stage_activation_bytes(spec, c2)
+        assert a2 == scale * a1, (spec.name, a1, a2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg=cfg_strategy())
+def test_tp_divides_tp_partitioned_params(cfg):
+    """Doubling TP halves the TP-split attention share exactly
+    (MLA geometry is 128-head divisible)."""
+    c1 = dataclasses.replace(cfg, tp=1)
+    c2 = dataclasses.replace(cfg, tp=2)
+    d1 = device_params(SPEC, c1)
+    d2 = device_params(SPEC, c2)
+    assert d1.attn_tp == 2 * d2.attn_tp
+    assert d1.attn_replicated == d2.attn_replicated   # replicated unaffected
+
+
+@settings(max_examples=30, deadline=None)
+@given(cfg=cfg_strategy())
+def test_estimate_total_is_sum_of_parts(cfg):
+    for spec in SPECS[:3]:
+        if cfg.pp > spec.n_layers:
+            continue
+        if spec.is_moe and spec.moe.n_routed % cfg.ep:
+            continue
+        e = estimate_memory(spec, cfg)
+        assert e.total == (e.params + e.grads + e.optimizer + e.activations
+                           + e.comm_buffers + e.fragmentation)
+        assert e.fragmentation == int(
+            (e.params + e.grads + e.optimizer + e.activations
+             + e.comm_buffers) * cfg.fragmentation)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ep=st.sampled_from([1, 2, 4, 8, 16]))
+def test_expert_params_scale_inverse_with_ep(ep):
+    """Routed experts divide by EP; shared expert replicates (paper §3.3)."""
+    cfg = dataclasses.replace(PAPER_CONFIG, ep=ep)
+    d = device_params(SPEC, cfg)
+    n_local = SPEC.moe.n_routed // ep
+    per_expert = 3 * SPEC.h * SPEC.moe.d_ff_expert
+    assert d.experts == 4 * (n_local + 1) * per_expert

@@ -1,0 +1,85 @@
+"""Exactness tests: reproduce the paper's Tables 3, 4, 6 to the parameter."""
+
+import pytest
+
+from repro.configs import get_spec
+from repro.core import params as P
+from repro.core.parallel_config import PAPER_CONFIG
+
+SPEC = get_spec("deepseek-v3")
+
+
+def test_embedding_params():
+    assert SPEC.embedding_params() == 926_679_040
+
+
+def test_mla_params_paper_row():
+    # Table 3 MLA row (includes q/kv RMSNorm weights)
+    assert P.mla_params_paper(SPEC) == 187_107_328
+    # projection-only count (the de-duplicated truth)
+    assert SPEC.attn_params_per_layer(include_qk_norm=False) == 187_105_280
+
+
+def test_dense_mlp_params():
+    assert SPEC.dense_mlp_params_per_layer() == 3 * 7168 * 18432 == 396_361_728
+
+
+def test_ln_row():
+    assert P.ln_params_paper(SPEC) == 2 * 7168 + 1536 + 512 == 16_384
+
+
+def test_gate_and_experts():
+    assert SPEC.moe.n_routed * SPEC.h == 1_835_008
+    experts = 3 * SPEC.h * SPEC.moe.d_ff_expert * (SPEC.moe.n_routed + SPEC.moe.n_shared)
+    assert experts == 11_318_329_344
+
+
+def test_table3_group_totals():
+    rows = P.table3_rows(SPEC)
+    per_layer = {r.layers: r.per_layer for r in rows}
+    assert per_layer["Layer 0"] == 1_510_164_480            # ~1.5 B
+    assert per_layer["Layers 1 - 2"] == 583_485_440          # ~0.58 B
+    assert per_layer["Layers 3 - 59"] == 11_507_288_064      # ~11.5 B
+    assert per_layer["Layer 60"] == 12_433_967_104           # ~12.4 B
+
+
+def test_total_params_671b():
+    total = P.total_params_paper(SPEC)
+    assert total == 671_026_522_112
+    assert round(total / 1e9) == 671
+
+
+def test_table4_pp16_stages():
+    rows = P.table4_stages(SPEC, pp=16)
+    assert len(rows) == 16
+    assert [len(r.layers) for r in rows] == [4] * 15 + [1]
+    # Stage 0: layers 0-3 (~14.16B per paper's rounding)
+    assert rows[0].params == (1_510_164_480 + 2 * 583_485_440 + 11_507_288_064)
+    # Stages 1-14: identical, 4 MoE layers each = 46 B
+    for r in rows[1:15]:
+        assert r.params == 4 * 11_507_288_064 == 46_029_152_256
+    # Stage 15: layer 60 = 12.4 B
+    assert rows[15].params == 12_433_967_104
+    assert sum(r.params for r in rows) == P.total_params_paper(SPEC)
+
+
+def test_table6_device_params():
+    dev = P.device_params(SPEC, PAPER_CONFIG)
+    assert dev.norms == 65_536
+    assert dev.attn_tp == 318_767_104
+    assert dev.attn_replicated == 110_886_912
+    assert dev.attn_tp + dev.attn_replicated == 429_654_016          # MLA row
+    assert dev.non_expert == 429_719_552                              # non-MoE part
+    assert dev.router == 4 * 1_835_008
+    assert dev.experts == 5_813_305_344
+    assert dev.expert == 5_820_645_376                                # MoE row
+    assert dev.total == 6_250_364_928                                 # Table 6 total
+    assert dev.total * 2 == 12_500_729_856                            # bytes
+
+
+def test_stage_selection_matches_paper_interior_stage():
+    # §3 analyses stages 1-14 (4 MoE layers, no embedding); the default
+    # stage=None must pick such a stage.
+    dev_default = P.device_params(SPEC, PAPER_CONFIG)
+    dev_stage1 = P.device_params(SPEC, PAPER_CONFIG, stage=1)
+    assert dev_default == dev_stage1

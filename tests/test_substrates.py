@@ -1,0 +1,134 @@
+"""Substrate integration tests: data pipeline, checkpointing, serving,
+planner, report rendering, kv-cache model."""
+
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_spec
+from repro.core import (PAPER_CONFIG, ParallelConfig, RecomputePolicy,
+                        ZeROStage, estimate_memory, kv_cache_bytes,
+                        min_memory_config, plan)
+from repro.data.synthetic import SyntheticConfig, config_for, make_batch
+from repro.models import build_model
+from repro.optim.adamw import init_train_state
+from repro.serving import ServeConfig, serve_requests
+
+
+def test_synthetic_batches_deterministic():
+    cfg = SyntheticConfig(batch=4, seq_len=64, vocab=1000, seed=7)
+    b1 = make_batch(cfg, step=3)
+    b2 = make_batch(cfg, step=3)
+    assert jnp.array_equal(b1["tokens"], b2["tokens"])
+    b3 = make_batch(cfg, step=4)
+    assert not jnp.array_equal(b1["tokens"], b3["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 1000
+
+
+def test_synthetic_has_copy_structure():
+    cfg = SyntheticConfig(batch=8, seq_len=256, vocab=5000, seed=0,
+                          repeat_prob=0.3)
+    t = np.asarray(make_batch(cfg, 0)["tokens"])
+    frac = (t[:, 8:] == t[:, :-8]).mean()
+    assert frac > 0.2, frac      # learnable signal present
+
+
+def test_checkpoint_roundtrip():
+    from repro.checkpoint import latest_step, restore, save
+    spec = get_spec("qwen2-1.5b", smoke=True)
+    model = build_model(spec)
+    state = init_train_state(model.init(jax.random.PRNGKey(0)))
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 42, state)
+        assert latest_step(d) == 42
+        zero_state = jax.tree.map(jnp.zeros_like, state)
+        back = restore(d, 42, zero_state)
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_serve_requests_greedy_deterministic():
+    spec = get_spec("gemma-2b", smoke=True)
+    model = build_model(spec)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = jnp.ones((2, 4), jnp.int32)
+    a = serve_requests(model, params, prompts,
+                       ServeConfig(max_new_tokens=8), cache_len=32)
+    b = serve_requests(model, params, prompts,
+                       ServeConfig(max_new_tokens=8), cache_len=32)
+    assert jnp.array_equal(a, b)
+    assert a.shape == (2, 8)
+
+
+def test_planner_finds_feasible_configs():
+    spec = get_spec("qwen2-1.5b")
+    entries = plan(spec, world_size=64, hbm_bytes=32 * 2**30, seq_len=4096,
+                   top_k=5)
+    assert entries, "1.5B model must fit 64x32GiB somehow"
+    for e in entries:
+        assert e.estimate.total <= 32 * 2**30
+        assert e.cfg.world_size == 64
+
+
+def test_planner_min_memory_is_min():
+    spec = get_spec("gemma-2b")
+    best = min_memory_config(spec, world_size=32, seq_len=4096)
+    assert best is not None
+    # spot-check: it beats a handful of arbitrary configs
+    for cfg in [ParallelConfig(dp=32), ParallelConfig(dp=8, tp=4),
+                ParallelConfig(dp=16, tp=2, zero=ZeROStage.OS)]:
+        assert best.estimate.total <= estimate_memory(spec, cfg).total
+
+
+def test_kv_cache_bytes_mla_advantage():
+    ds = get_spec("deepseek-v3")
+    cfg = ParallelConfig(dp=1, tp=1, pp=1, micro_batch=1, seq_len=4096)
+    mla = kv_cache_bytes(ds, cfg)
+    mha = kv_cache_bytes(dataclasses.replace(
+        ds, attention=__import__("repro.core.notation",
+                                 fromlist=["AttentionKind"]
+                                 ).AttentionKind.MHA, mla=None), cfg)
+    assert mha / mla > 50       # the MLA latent-cache advantage
+
+
+def test_kv_cache_sliding_window_caps():
+    spec = get_spec("qwen2-1.5b")
+    long_cfg = ParallelConfig(dp=1, tp=1, pp=1, micro_batch=1,
+                              seq_len=524288)
+    unbounded = kv_cache_bytes(spec, long_cfg)
+    capped = kv_cache_bytes(dataclasses.replace(spec, sliding_window=8192),
+                            long_cfg)
+    assert capped * 32 < unbounded
+
+
+def test_report_renders():
+    from repro.core import report
+    spec = get_spec("deepseek-v3")
+    for fn in (report.render_table3, lambda s: report.render_table4(s, 16)):
+        out = fn(spec)
+        assert isinstance(out, str) and len(out) > 100
+    for fn in (report.render_table6, report.render_table8,
+               report.render_table10, report.render_full_estimate):
+        out = fn(spec, PAPER_CONFIG)
+        assert isinstance(out, str) and len(out) > 50
+
+
+def test_remat_policies_same_loss():
+    """AC none/selective/full change memory, never numerics."""
+    from repro.models.transformer import ModelOptions
+    from repro.data.synthetic import config_for, make_batch
+    spec = get_spec("minitron-4b", smoke=True)
+    batch = make_batch(config_for(spec, 2, 32), 0)
+    losses = []
+    for rc in RecomputePolicy:
+        model = build_model(spec, ModelOptions(recompute=rc))
+        params = model.init(jax.random.PRNGKey(0))
+        loss, _ = jax.jit(model.loss)(params, batch)
+        losses.append(float(loss))
+    assert max(losses) - min(losses) < 1e-3, losses

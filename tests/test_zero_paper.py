@@ -1,0 +1,61 @@
+"""Exactness tests for paper §4 Table 8 (ZeRO memory) with Table 7 dtypes."""
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_spec
+from repro.core.parallel_config import PAPER_CONFIG, ZeROStage
+from repro.core.zero import zero_memory, zero_table
+
+SPEC = get_spec("deepseek-v3")
+GiB = 2**30
+
+
+def test_zero_none():
+    m = zero_memory(SPEC, dataclasses.replace(PAPER_CONFIG, zero=ZeROStage.NONE))
+    assert m.params == 12_500_729_856                      # 11.64 GiB
+    assert m.grads == 6_250_364_928 * 4                    # 23.3 GiB
+    assert m.optimizer == 6_250_364_928 * 8                # 46.6 GiB
+    assert round(m.params / GiB, 2) == 11.64
+    assert round(m.grads / GiB, 1) == 23.3
+    assert round(m.optimizer / GiB, 1) == 46.6
+    # paper's P+G+O column sums the rounded per-column GiB values
+    assert round(m.params / GiB, 2) + round(m.grads / GiB, 1) \
+        + round(m.optimizer / GiB, 1) == pytest.approx(81.54)
+    assert round(m.total / GiB, 1) == 81.5                 # exact bytes
+
+
+def test_zero_os():
+    m = zero_memory(SPEC, dataclasses.replace(PAPER_CONFIG, zero=ZeROStage.OS))
+    shard = 429_719_552 // 32 + 5_820_645_376 // 8
+    assert m.optimizer == shard * 8 == 5_928_075_264       # 5.52 GiB
+    assert round(m.optimizer / GiB, 2) == 5.52
+    assert m.params == 12_500_729_856
+    assert m.grads == 6_250_364_928 * 4
+    assert round(m.params / GiB, 2) + round(m.grads / GiB, 1) \
+        + round(m.optimizer / GiB, 2) == pytest.approx(40.46)  # paper's rounded sum
+    assert round(m.total / GiB, 2) == 40.45                # exact bytes
+
+
+def test_zero_os_g():
+    m = zero_memory(SPEC, dataclasses.replace(PAPER_CONFIG, zero=ZeROStage.OS_G))
+    shard = 429_719_552 // 32 + 5_820_645_376 // 8
+    assert m.grads == shard * 4
+    assert round(m.grads / GiB, 2) == 2.76
+    assert round(m.total / GiB, 2) == 19.92
+
+
+def test_zero_os_g_params():
+    m = zero_memory(SPEC, dataclasses.replace(PAPER_CONFIG,
+                                              zero=ZeROStage.OS_G_PARAMS))
+    shard = 429_719_552 // 32 + 5_820_645_376 // 8
+    assert m.params == shard * 2
+    assert round(m.params / GiB, 2) == 1.38
+    assert round(m.total / GiB, 2) == 9.66
+
+
+def test_zero_table_monotone():
+    tbl = zero_table(SPEC, PAPER_CONFIG)
+    totals = [tbl[z.value].total for z in ZeROStage]
+    assert totals == sorted(totals, reverse=True)
