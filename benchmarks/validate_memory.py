@@ -123,6 +123,81 @@ def validate_one(arch: str, shape: str, mesh_tag: str = "pod16x16",
     return out
 
 
+def validate_pp(arch: str, shape: str, pp: int,
+                mesh_tag: str = "pod16x16",
+                tag_suffix: str = "") -> Optional[Dict[str, Any]]:
+    """Per-stage validation of a ``dryrun --pp N`` artifact: XLA's per-stage
+    temp bytes (activations + grads + transients of the stage program, which
+    holds the 1F1B in-flight microbatch count of that stage) against
+    ``estimate_memory(spec, cfg, stage=s, in_flight_microbatches=...)``.
+
+    The check is the paper's §6 in-flight-multiplier *direction*: stage 0
+    (pp microbatches resident) must not be lighter than the last stage
+    (1 resident) — in both the measured and the analytic column.  Run the
+    dry-run with ``--n-micro >= pp``; with fewer microbatches every stage
+    holds one in flight and the ratio degenerates to ~1."""
+    path = os.path.join(
+        DRY, f"{arch}__{shape}__{mesh_tag}__pp{pp}{tag_suffix}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    return _validate_pp_rec(rec)
+
+
+def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
+    arch, shape, pp = rec["arch"], rec["shape"], rec["pp"]
+    mesh_tag = rec["mesh"]
+    if rec.get("status") != "ok":
+        return {"arch": arch, "shape": shape, "pp": pp,
+                "status": rec.get("status")}
+    stages = rec["stages"]
+    temps = [s["memory"].get("temp_size_in_bytes", 0) for s in stages]
+    acts = [s["analytic"]["activations"] for s in stages]
+    # The last stage's temps also hold the fp32 logits/CE buffers the
+    # activation model deliberately excludes (same adjustment validate_one
+    # makes) — subtract the analytically known size before comparing shape.
+    from repro.configs import get_spec
+    from repro.launch.specs import SHAPES
+    spec = get_spec(arch)
+    info = SHAPES[shape]
+    model_ax = int(mesh_tag.split("x")[-1])
+    n_micro = max(rec.get("options", {}).get("n_micro", 1), 1)
+    n_chips = 512 if mesh_tag.startswith("pod2x") else 256
+    data_ax = n_chips // model_ax // pp
+    b_dev = max(info["batch"] // n_micro // max(data_ax, 1), 1)
+    logits = b_dev * info["seq"] * spec.vocab * 4
+    if spec.vocab % model_ax == 0:
+        logits //= model_ax
+    adj = list(temps)
+    adj[-1] = max(adj[-1] - logits, 1)
+    return {
+        "arch": arch, "shape": shape, "pp": pp, "status": "ok",
+        "n_micro": n_micro,
+        "stages": [{
+            "stage": s["stage"], "layers": s["layers"],
+            "in_flight": s["in_flight"],
+            "xla_temp_bytes": temps[i],
+            "analytic_act_bytes": acts[i],
+            "analytic_total_bytes": s["analytic"]["total"],
+        } for i, s in enumerate(stages)],
+        "measured_ratio_stage0_over_last": adj[0] / max(adj[-1], 1),
+        "analytic_ratio_stage0_over_last": acts[0] / max(acts[-1], 1),
+        "direction_ok": (adj[0] >= adj[-1]) and (acts[0] >= acts[-1]),
+    }
+
+
+def _pp_artifacts() -> List[Dict[str, Any]]:
+    import glob
+    rows = []
+    for p in sorted(glob.glob(os.path.join(DRY, "*__pp*.json"))):
+        with open(p) as f:
+            rec = json.load(f)
+        if "pp" in rec:
+            rows.append(_validate_pp_rec(rec))
+    return rows
+
+
 def main():
     from repro.configs import ASSIGNED
     from repro.launch.specs import SHAPES
@@ -146,8 +221,29 @@ def main():
               f"{r['state_ratio']:.2f} | "
               + (f"{tr:.2f} |" if tr else "- |"))
     ratios = [r["state_ratio"] for r in ok]
-    print(f"\nstate-bytes agreement: median {np.median(ratios):.3f}, "
-          f"[{min(ratios):.2f}, {max(ratios):.2f}] over {len(ok)} combos")
+    if ratios:
+        print(f"\nstate-bytes agreement: median {np.median(ratios):.3f}, "
+              f"[{min(ratios):.2f}, {max(ratios):.2f}] over {len(ok)} combos")
+
+    pp_rows = _pp_artifacts()
+    if pp_rows:
+        with open(os.path.join(ART, "validation_pp.json"), "w") as f:
+            json.dump(pp_rows, f, indent=1)
+        print("\n## Per-stage 1F1B residency (dryrun --pp) vs "
+              "estimate_memory(stage=s)")
+        print("| arch | shape | pp | n_micro | stage0/last XLA (logits-adj) |"
+              " stage0/last analytic act | direction |")
+        print("|---|---|---|---|---|---|---|")
+        for r in pp_rows:
+            if r.get("status") != "ok":
+                print(f"| {r['arch']} | {r['shape']} | {r['pp']} | - | - | - |"
+                      f" {r.get('status')} |")
+                continue
+            print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
+                  f" {r['n_micro']} |"
+                  f" {r['measured_ratio_stage0_over_last']:.2f} |"
+                  f" {r['analytic_ratio_stage0_over_last']:.2f} |"
+                  f" {'ok' if r['direction_ok'] else 'MISMATCH'} |")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@ memory model for distributed MoE/dense/SSM training (params, ZeRO states,
 activations, buffers) plus a configuration planner built on it."""
 
 from .activations import (layer_activation_bytes, moe_activation_bytes,
-                          mla_activation_bytes, stage_activation_bytes, table10)
+                          mla_activation_bytes, one_f1b_in_flight,
+                          stage_activation_bytes, table10)
 from .memory_model import MemoryEstimate, estimate_memory, fits, kv_cache_bytes
 from .notation import (AttentionKind, EncoderSpec, FamilyKind, MLASpec,
                        MlpKind, MoESpec, ModelSpec, SSMSpec, human_bytes,
@@ -24,7 +25,8 @@ __all__ = [
     "device_params", "enumerate_configs", "estimate_memory", "fits",
     "human_bytes", "human_count", "kv_cache_bytes", "layer_activation_bytes",
     "max_stage", "min_memory_config", "mla_activation_bytes",
-    "moe_activation_bytes", "plan", "stage_activation_bytes", "table10",
+    "moe_activation_bytes", "one_f1b_in_flight", "plan",
+    "stage_activation_bytes", "table10",
     "table3_rows", "table4_stages", "total_params_paper", "zero_memory",
     "zero_table",
 ]

@@ -20,7 +20,7 @@ Conventions (paper §5):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 from .notation import AttentionKind, FamilyKind, MlpKind, ModelSpec
 from .parallel_config import ParallelConfig, RecomputePolicy
@@ -188,6 +188,18 @@ def layer_activation_bytes(spec: ModelSpec, cfg: ParallelConfig,
         mlp = dense_mlp_activation_bytes(spec, b, s, **kw)
     return ActivationBreakdown(attn=attn, mlp=mlp, ssm=ssm,
                                per_layer=attn + mlp + ssm)
+
+
+def one_f1b_in_flight(pp: int, stage: int, n_micro: Optional[int] = None) -> int:
+    """In-flight (activation-resident) microbatches of PP ``stage`` under the
+    1F1B schedule: stage s holds pp - s warmup forwards before its first
+    backward frees one, capped by the number of microbatches.  Stage 0 is the
+    worst case (pp in flight), the last stage holds exactly 1 — the
+    stage-dependent multiplier the paper's §6 tables assume."""
+    if not 0 <= stage < pp:
+        raise ValueError(f"stage {stage} outside [0, {pp})")
+    resident = pp - stage
+    return min(n_micro, resident) if n_micro is not None else resident
 
 
 def stage_activation_bytes(spec: ModelSpec, cfg: ParallelConfig,

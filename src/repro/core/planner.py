@@ -14,6 +14,7 @@ import dataclasses
 import itertools
 from typing import Iterable, List, Optional, Sequence, Tuple
 
+from .activations import one_f1b_in_flight
 from .memory_model import MemoryEstimate, estimate_memory
 from .notation import ModelSpec
 from .parallel_config import ParallelConfig, RecomputePolicy, ZeROStage
@@ -23,10 +24,11 @@ from .parallel_config import ParallelConfig, RecomputePolicy, ZeROStage
 class PlanEntry:
     cfg: ParallelConfig
     estimate: MemoryEstimate
+    budget: Optional[int] = None    # HBM bytes the plan was ranked against
 
     @property
     def headroom(self) -> int:
-        return self._budget - self.estimate.total if hasattr(self, "_budget") else 0
+        return self.budget - self.estimate.total if self.budget else 0
 
 
 def _divisors(n: int, cap: int = 1 << 30) -> List[int]:
@@ -68,20 +70,26 @@ def enumerate_configs(spec: ModelSpec, world_size: int, *,
 
 
 def plan(spec: ModelSpec, world_size: int, hbm_bytes: int, *,
-         seq_len: int = 4096, top_k: int = 10,
+         seq_len: int = 4096, top_k: int = 10, pp_in_flight: bool = True,
          **enum_kw) -> List[PlanEntry]:
     """Feasible configs under the HBM budget, best-first.
 
     Ranking: least recompute, largest micro-batch, least TP*PP (model-parallel
     keeps devices busier when avoidable), then most headroom.
+
+    ``pp_in_flight`` sizes activations for the 1F1B steady state (the
+    runtime's schedule): the worst stage holds ``one_f1b_in_flight(pp, 0)``
+    = pp microbatches, not 1 — without it the planner admits pp>1 configs the
+    executor would OOM.  Set False for the paper's single-microbatch view.
     """
     order_r = {RecomputePolicy.NONE: 0, RecomputePolicy.SELECTIVE: 1,
                RecomputePolicy.FULL: 2}
     entries: List[PlanEntry] = []
     for cfg in enumerate_configs(spec, world_size, seq_len=seq_len, **enum_kw):
-        est = estimate_memory(spec, cfg)
+        in_flight = one_f1b_in_flight(cfg.pp, 0) if pp_in_flight else None
+        est = estimate_memory(spec, cfg, in_flight_microbatches=in_flight)
         if est.total <= hbm_bytes:
-            entries.append(PlanEntry(cfg, est))
+            entries.append(PlanEntry(cfg, est, budget=hbm_bytes))
     entries.sort(key=lambda e: (order_r[e.cfg.recompute], -e.cfg.micro_batch,
                                 e.cfg.tp * e.cfg.pp, e.estimate.total))
     return entries[:top_k]

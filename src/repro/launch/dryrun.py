@@ -192,6 +192,173 @@ def _fake_state(abstract_params):
                       v=abstract_params)
 
 
+def _stage_input_shardings(mesh, arrs):
+    ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not ba:
+        return tuple(NamedSharding(mesh, P()) for _ in arrs)
+    out = []
+    for a in arrs:
+        if a.shape[1] % int(np.prod([mesh.shape[x] for x in ba])) == 0:
+            out.append(NamedSharding(
+                mesh, P(None, ba, *(None,) * (len(a.shape) - 2))))
+        else:
+            out.append(NamedSharding(mesh, P()))
+    return tuple(out)
+
+
+def _make_stage_probe(spec, opts, pp, stage, in_flight):
+    """Per-stage training-memory probe: forward ``in_flight`` microbatches
+    with live activations (a scan whose backward consumes them last-in) then
+    one accumulated backward + AdamW update — the 1F1B residency of stage
+    ``stage`` as one compilable program.  Last stage reduces via the real CE;
+    interior stages via a mean-square surrogate (same backward structure)."""
+    from repro.models.pipeline import make_stage_fn
+    from repro.optim.adamw import AdamWConfig, adamw_update
+    fwd = make_stage_fn(spec, opts, pp, stage)
+    is_first, is_last = stage == 0, stage == pp - 1
+
+    def probe(state, *arrs):
+        def scalar(params_):
+            def body(c, inp):
+                if is_first:
+                    x, tk = None, inp[0]
+                elif is_last:
+                    x, tk = inp
+                else:
+                    (x,), tk = inp, None
+                out, aux = fwd(params_, x, tk)
+                if is_last:
+                    targets = tk[:, 1:]
+                    lg = out[:, :-1].astype(jnp.float32)
+                    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+                    gold = jnp.take_along_axis(
+                        lg, targets[..., None], axis=-1)[..., 0]
+                    val = jnp.mean(logz - gold)
+                else:
+                    val = jnp.mean(jnp.square(out.astype(jnp.float32)))
+                return c + val + 0.01 * aux, None
+            tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), arrs)
+            return tot / in_flight
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32),
+                             jax.grad(scalar)(state.params))
+        new_state, _ = adamw_update(state, grads, AdamWConfig())
+        return new_state
+
+    return probe
+
+
+def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
+           force: bool = False, tag_suffix: str = "", mesh_shape=None,
+           **build_kw) -> Dict[str, Any]:
+    """--pp N: lower + compile each pipeline stage as its own program on the
+    stage's (data/pp, model) sub-mesh and record per-stage memory_analysis
+    next to the analytical estimate_memory(stage=s, in_flight=1F1B(s)).
+
+    This is the heterogeneous view (true stage params: embed on stage 0,
+    head on the last) — no SPMD padding — so the records are directly
+    comparable to the paper's per-stage Tables 4/5 arithmetic."""
+    from repro.core import estimate_memory, one_f1b_in_flight
+    from repro.core.parallel_config import ParallelConfig
+    from repro.models.pipeline import (check_pipeline_supported, partition,
+                                       stage_params_slice)
+    from repro.optim.adamw import init_train_state
+
+    os.makedirs(ART_DIR, exist_ok=True)
+    data, model_ax = tuple(mesh_shape) if mesh_shape else (16, 16)
+    mesh_tag = ("pod2x" if multi_pod else "pod") + f"{data}x{model_ax}"
+    tag = f"{arch}__{shape_name}__{mesh_tag}__pp{pp}{tag_suffix}"
+    path = os.path.join(ART_DIR, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    info = SHAPES[shape_name]
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "pp": pp,
+                           "mesh": mesh_tag, "options": build_kw}
+    try:
+        if info["kind"] != "train":
+            raise NotImplementedError("--pp covers training shapes only "
+                                      "(the paper's per-stage analysis)")
+        spec = spec_for_shape(get_spec(arch), shape_name)
+        check_pipeline_supported(spec)
+        if data % pp:
+            raise ValueError(f"pp={pp} must divide data axis {data}")
+        n_micro = max(build_kw.get("n_micro", 1), 1)
+        opts = ModelOptions(
+            attn_impl=build_kw.get("attn_impl", "naive"),
+            recompute=RecomputePolicy(build_kw.get("recompute", "none")),
+            capacity_factor=build_kw.get("capacity_factor", 1.25),
+            moe_impl=build_kw.get("moe_impl", "scatter"))
+        model = build_model(spec, opts)
+        params_abs = model.abstract_params()
+        mesh = make_production_mesh(multi_pod=multi_pod,
+                                    shape=(data // pp, model_ax))
+        dp = (data // pp) * (2 if multi_pod else 1)
+        b_micro = max(info["batch"] // n_micro, 1)
+        n_exp = spec.moe.n_routed if spec.is_moe else None
+        ep = min(model_ax, n_exp) if n_exp else 1
+        cfg = ParallelConfig(
+            dp=dp, tp=model_ax, pp=pp, ep=ep, etp=1, sp=True,
+            zero=ZeROStage(build_kw.get("zero", "os+g")),
+            recompute=RecomputePolicy(build_kw.get("recompute", "none")),
+            micro_batch=max(b_micro // dp, 1), seq_len=info["seq"])
+        stages = []
+        with axis_rules(mesh):
+            for s in range(pp):
+                k = one_f1b_in_flight(pp, s, n_micro)
+                abstract_stage = jax.eval_shape(
+                    lambda p: stage_params_slice(p, spec, pp, s), params_abs)
+                abstract_state = jax.eval_shape(init_train_state,
+                                                abstract_stage)
+                arrs = []
+                if s == 0:
+                    arrs.append(jax.ShapeDtypeStruct(
+                        (k, b_micro, info["seq"]), jnp.int32))
+                else:
+                    arrs.append(jax.ShapeDtypeStruct(
+                        (k, b_micro, info["seq"], spec.h), jnp.bfloat16))
+                    if s == pp - 1:
+                        arrs.append(jax.ShapeDtypeStruct(
+                            (k, b_micro, info["seq"]), jnp.int32))
+                probe = _make_stage_probe(spec, opts, pp, s, k)
+                st_sh = state_shardings(abstract_state, mesh, cfg.zero)
+                in_sh = _stage_input_shardings(mesh, arrs)
+                t0 = time.perf_counter()
+                compiled = jax.jit(
+                    probe, in_shardings=(st_sh,) + in_sh,
+                    out_shardings=st_sh,
+                ).lower(abstract_state, *arrs).compile()
+                t_c = time.perf_counter() - t0
+                mem = compiled.memory_analysis()
+                est = estimate_memory(spec, cfg, stage=s,
+                                      in_flight_microbatches=k)
+                stages.append({
+                    "stage": s, "layers": [int(l) for l in
+                                           partition(spec, pp).stages[s]],
+                    "in_flight": k, "t_compile_s": t_c,
+                    "memory": _mem_dict(mem),
+                    "analytic": {kk: int(vv)
+                                 for kk, vv in est.breakdown().items()},
+                })
+                print(f"[{tag}] stage {s}: in_flight={k} "
+                      f"temp={stages[-1]['memory'].get('temp_size_in_bytes', 0)/2**30:.2f} GiB "
+                      f"analytic_act={est.activations/2**30:.2f} GiB")
+        temps = [st["memory"].get("temp_size_in_bytes", 0) for st in stages]
+        acts = [st["analytic"]["activations"] for st in stages]
+        rec.update(status="ok", stages=stages,
+                   measured_temp_stage0_over_last=(temps[0] / max(temps[-1], 1)),
+                   analytic_act_stage0_over_last=(acts[0] / max(acts[-1], 1)))
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[{tag}] {rec['status']}"
+          + (f" ({rec.get('error', '')})" if rec["status"] == "error" else ""))
+    return rec
+
+
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             force: bool = False, tag_suffix: str = "",
             mesh_shape=None, **build_kw) -> Dict[str, Any]:
@@ -262,6 +429,9 @@ def main() -> int:
                     choices=[r.value for r in RecomputePolicy])
     ap.add_argument("--attn", default="naive", choices=["naive", "chunked"])
     ap.add_argument("--n-micro", type=int, default=1)
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages: >1 compiles each stage as its own "
+                         "program and records per-stage memory_analysis")
     ap.add_argument("--capacity-factor", type=float, default=1.25)
     ap.add_argument("--moe-impl", default="scatter",
                     choices=["scatter", "a2a"])
@@ -288,9 +458,14 @@ def main() -> int:
 
     failures = 0
     for a, s in combos:
-        rec = run_one(a, s, multi_pod=args.multi_pod, force=args.force,
-                      tag_suffix=args.tag_suffix, mesh_shape=mesh_shape,
-                      **build_kw)
+        if args.pp > 1:
+            rec = run_pp(a, s, args.pp, multi_pod=args.multi_pod,
+                         force=args.force, tag_suffix=args.tag_suffix,
+                         mesh_shape=mesh_shape, **build_kw)
+        else:
+            rec = run_one(a, s, multi_pod=args.multi_pod, force=args.force,
+                          tag_suffix=args.tag_suffix, mesh_shape=mesh_shape,
+                          **build_kw)
         if rec["status"] == "error":
             failures += 1
     print(f"done: {len(combos)} combos, {failures} failures")

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.notation import ModelSpec
+from repro.parallel.compat import shard_map
 from .layers import mlp_apply
 from .moe import MoEOutput, _positions_in_expert
 
@@ -74,14 +75,13 @@ def moe_forward_a2a(params, spec: ModelSpec, x: jnp.ndarray, *,
     }
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=({"router": P(None, None),
                    "we_gate": P("model", None, None),
                    "we_up": P("model", None, None),
                    "we_down": P("model", None, None)},
                   P(data_axes, "model", None)),
-        out_specs=(P(data_axes, "model", None), P()),
-        check_vma=False)
+        out_specs=(P(data_axes, "model", None), P()))
     def dispatch(lp, xs):
         b_loc, s_loc, h = xs.shape
         t_loc = b_loc * s_loc

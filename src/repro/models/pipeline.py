@@ -1,0 +1,334 @@
+"""Pipeline-parallel stage partitioning of a Model.
+
+The layer→stage assignment is ``core.params.pp_stage_layers`` — the exact
+split behind the paper's Table 4 — so the runtime executor, the per-stage
+dry-run probes and the analytical model (``estimate_memory(stage=...)``,
+``table4_stages``) can never disagree about which layers live where.
+
+Two views of the same partition are provided:
+
+* **Heterogeneous stage slices** (``stage_params_slice`` +
+  ``make_stage_fn``): stage s's true parameter subtree (embedding only on
+  stage 0, final norm / head only on the last stage, its own contiguous
+  dense/MoE sub-stacks) and a forward for exactly those layers.  Used by the
+  dry-run to lower/compile each stage as its own program and read XLA's
+  per-stage ``memory_analysis`` — the numbers compared against
+  ``estimate_memory(spec, cfg, stage=s, in_flight_microbatches=...)``.
+
+* **Stage-stacked (SPMD) layout** (``stack_pipeline_params`` /
+  ``unstack_pipeline_grads`` + ``pipeline_stage_apply``): every parameter
+  leaf gains a leading ``pp`` dim sharded over the ``pipe`` mesh axis, with
+  per-stage layer stacks padded to the widest stage (masked identity slots)
+  and a *union* slot structure (a slot carries both the dense-MLP and MoE
+  subtrees when the model mixes kinds; a per-slot flag selects).  This is
+  what the 1F1B executor (``train.pipeline_loop``) runs under ``shard_map``
+  — one program, stage identity = ``lax.axis_index('pipe')``.
+
+The stacked layout trades memory for SPMD uniformity (padded slots, the
+unused half of mixed dense/MoE slots, zero embed rows on interior stages);
+the per-stage dry-run path has no such padding, so memory validation always
+uses the heterogeneous view.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.notation import AttentionKind, FamilyKind, ModelSpec
+from repro.core.params import pp_stage_layers
+from repro.parallel.axes import logical_constraint
+from . import attention as A
+from . import mla as M
+from .layers import embed_apply, mlp_apply, rmsnorm
+from .moe import moe_forward
+from .transformer import ModelOptions, _remat, stack_apply
+
+PyTree = Any
+
+
+def check_pipeline_supported(spec: ModelSpec) -> None:
+    """The pipeline runtime covers the paper's training families: decoder-only
+    dense and MoE transformers (MLA or GQA/MHA attention).  Recurrent, enc-dec
+    and stub-frontend families keep the pp=1 path."""
+    if spec.ssm is not None:
+        raise NotImplementedError("pipeline runtime: SSM/hybrid unsupported")
+    if spec.encoder is not None:
+        raise NotImplementedError("pipeline runtime: enc-dec unsupported")
+    if spec.family == FamilyKind.VLM:
+        raise NotImplementedError("pipeline runtime: VLM frontend unsupported")
+    if spec.attention == AttentionKind.NONE:
+        raise NotImplementedError("pipeline runtime: attention-free unsupported")
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePartition:
+    """Layer→stage assignment plus the index/mask arrays both runtime views
+    derive from it.  All arrays are numpy (static schedule data)."""
+
+    pp: int
+    n_layers: int
+    n_dense: int                      # dense layers are global ids [0, n_dense)
+    stages: Tuple[Tuple[int, ...], ...]
+    l_max: int                        # widest stage (slot count of the SPMD view)
+    idx: np.ndarray                   # (pp, l_max) global layer id; pads repeat
+    mask: np.ndarray                  # (pp, l_max) f32: 1 real slot, 0 pad
+    moe_flag: np.ndarray              # (pp, l_max) f32: 1 MoE layer, 0 dense
+    stage_of: np.ndarray              # (n_layers,) stage owning each layer
+    slot_of: np.ndarray               # (n_layers,) slot within that stage
+
+
+def partition(spec: ModelSpec, pp: int) -> StagePartition:
+    if not 1 <= pp <= spec.n_layers:
+        raise ValueError(f"pp={pp} must be in [1, n_layers={spec.n_layers}]")
+    stages = tuple(tuple(ls) for ls in pp_stage_layers(spec.n_layers, pp))
+    n_dense = spec.n_layers - spec.n_moe_layers()
+    l_max = max(len(ls) for ls in stages)
+    idx = np.zeros((pp, l_max), np.int32)
+    mask = np.zeros((pp, l_max), np.float32)
+    moe_flag = np.zeros((pp, l_max), np.float32)
+    stage_of = np.zeros(spec.n_layers, np.int32)
+    slot_of = np.zeros(spec.n_layers, np.int32)
+    for i, ls in enumerate(stages):
+        for j in range(l_max):
+            l = ls[j] if j < len(ls) else ls[-1]      # pads repeat a real layer
+            idx[i, j] = l
+            if j < len(ls):
+                mask[i, j] = 1.0
+                moe_flag[i, j] = float(l >= n_dense)
+                stage_of[l] = i
+                slot_of[l] = j
+    return StagePartition(pp=pp, n_layers=spec.n_layers, n_dense=n_dense,
+                          stages=stages, l_max=l_max, idx=idx, mask=mask,
+                          moe_flag=moe_flag, stage_of=stage_of,
+                          slot_of=slot_of)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous view: true per-stage parameter subtrees + per-stage forward
+# ---------------------------------------------------------------------------
+
+def stage_params_slice(params: PyTree, spec: ModelSpec, pp: int,
+                       stage: int) -> PyTree:
+    """Stage ``stage``'s parameters in the Model layout (keys kept so the
+    §3 TP/ZeRO sharding rules in ``parallel.sharding`` apply unchanged)."""
+    check_pipeline_supported(spec)
+    part = partition(spec, pp)
+    layers = part.stages[stage]
+    lo, hi = layers[0], layers[-1] + 1
+    nd = part.n_dense
+    out: Dict[str, Any] = {}
+    if stage == 0:
+        out["embed"] = params["embed"]
+    d_lo, d_hi = lo, min(hi, nd)
+    if d_hi > d_lo:
+        out["dense_layers"] = jax.tree.map(lambda a: a[d_lo:d_hi],
+                                           params["dense_layers"])
+    m_lo, m_hi = max(lo, nd) - nd, hi - nd
+    if m_hi > max(m_lo, 0):
+        out["moe_layers"] = jax.tree.map(lambda a: a[m_lo:m_hi],
+                                         params["moe_layers"])
+    if stage == pp - 1:
+        out["final_norm"] = params["final_norm"]
+        if spec.tie_embeddings:
+            out["embed"] = params["embed"]
+        elif "head" in params:
+            out["head"] = params["head"]
+    return out
+
+
+def make_stage_fn(spec: ModelSpec, opts: ModelOptions, pp: int, stage: int):
+    """fn(stage_params, x, tokens) -> (out, aux).
+
+    Stage 0 embeds ``tokens`` (``x`` is ignored); interior stages transform
+    the boundary activation ``x``; the last stage returns vocab logits
+    (callers compute the loss — the executor and the dry-run probes need
+    different reductions).  With pp=1 this is exactly ``Model.forward`` for
+    the supported families.
+    """
+    check_pipeline_supported(spec)
+    part = partition(spec, pp)
+    gemma = spec.name.startswith("gemma")
+    is_first, is_last = stage == 0, stage == pp - 1
+    window = spec.sliding_window
+
+    def fn(stage_params: PyTree, x: Optional[jnp.ndarray],
+           tokens: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if is_first:
+            x = embed_apply(stage_params["embed"], tokens,
+                            scale_by_dim=gemma, h=spec.h)
+        b, s = x.shape[0], x.shape[1]
+        x = logical_constraint(x, ("batch", "seq", "embed"))
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        aux = jnp.zeros((), jnp.float32)
+        if "dense_layers" in stage_params:
+            x, a = stack_apply(stage_params["dense_layers"], spec, opts, x,
+                               positions, False, window=window)
+            aux = aux + a
+        if "moe_layers" in stage_params:
+            x, a = stack_apply(stage_params["moe_layers"], spec, opts, x,
+                               positions, True, window=window)
+            aux = aux + a
+        if is_last:
+            x = rmsnorm(stage_params["final_norm"], x, spec.norm_eps,
+                        gemma_style=gemma)
+            if spec.tie_embeddings:
+                logits = x @ stage_params["embed"]["w"].T
+            else:
+                logits = x @ stage_params["head"]["w"]
+            logits = logical_constraint(logits, ("batch", "seq", "vocab"))
+            return logits, aux
+        return x, aux
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Stage-stacked (SPMD) view: leading pp dim for shard_map over 'pipe'
+# ---------------------------------------------------------------------------
+
+def _take_layers(leaf: jnp.ndarray, index: np.ndarray) -> jnp.ndarray:
+    flat = jnp.take(leaf, jnp.asarray(index.reshape(-1)), axis=0)
+    return flat.reshape(index.shape + leaf.shape[1:])
+
+
+def stack_pipeline_params(params: PyTree, spec: ModelSpec, pp: int) -> PyTree:
+    """Model params → stage-stacked layout.
+
+    layers: union slot structure, leaves (pp, l_max, ...); pad slots repeat a
+    real layer of the stage (masked to identity at apply time) and the unused
+    kind of a mixed dense/MoE slot holds a clipped-gather copy (never selected,
+    so it receives exactly zero gradient).  embed/final_norm/head: (pp, ...)
+    rows, zero except on the stage that owns them.
+    """
+    check_pipeline_supported(spec)
+    part = partition(spec, pp)
+    nd = part.n_dense
+    dense = params.get("dense_layers") or {}
+    moe = params.get("moe_layers") or {}
+    idx = part.idx
+    idx_d = np.clip(idx, 0, max(nd - 1, 0))
+    idx_m = np.clip(idx - nd, 0, max(part.n_layers - nd - 1, 0))
+
+    layers: Dict[str, Any] = {}
+    for k in dense:
+        if k in moe:
+            layers[k] = jax.tree.map(
+                lambda a, b: _take_layers(jnp.concatenate([a, b], axis=0), idx),
+                dense[k], moe[k])
+        else:
+            layers[k] = jax.tree.map(lambda a: _take_layers(a, idx_d), dense[k])
+    for k in moe:
+        if k not in dense:
+            layers[k] = jax.tree.map(lambda a: _take_layers(a, idx_m), moe[k])
+
+    emb = params["embed"]["w"]
+    emb_st = jnp.zeros((pp,) + emb.shape, emb.dtype).at[0].set(emb)
+    if spec.tie_embeddings:
+        emb_st = emb_st.at[pp - 1].set(emb)
+    fin = params["final_norm"]["scale"]
+    fin_st = jnp.zeros((pp,) + fin.shape, fin.dtype).at[pp - 1].set(fin)
+    out: Dict[str, Any] = {"layers": layers,
+                           "embed": {"w": emb_st},
+                           "final_norm": {"scale": fin_st}}
+    if "head" in params:
+        hd = params["head"]["w"]
+        out["head"] = {"w": jnp.zeros((pp,) + hd.shape, hd.dtype)
+                       .at[pp - 1].set(hd)}
+    return out
+
+
+def unstack_pipeline_grads(gstack: PyTree, params: PyTree, spec: ModelSpec,
+                           pp: int) -> PyTree:
+    """Stage-stacked gradient pytree → the Model parameter layout (each global
+    layer appears in exactly one (stage, slot); embed sums its stage-0 and —
+    when tied — last-stage rows)."""
+    part = partition(spec, pp)
+    nd = part.n_dense
+    sof = jnp.asarray(part.stage_of)
+    slf = jnp.asarray(part.slot_of)
+
+    def gather(leaf: jnp.ndarray) -> jnp.ndarray:
+        return leaf[sof, slf]                      # (n_layers, ...)
+
+    dense = params.get("dense_layers") or {}
+    moe = params.get("moe_layers") or {}
+    out: Dict[str, Any] = {"dense_layers": {}, "moe_layers": {}}
+    for k in dense:
+        out["dense_layers"][k] = jax.tree.map(
+            lambda a: gather(a)[:nd], gstack["layers"][k])
+    for k in moe:
+        out["moe_layers"][k] = jax.tree.map(
+            lambda a: gather(a)[nd:], gstack["layers"][k])
+    g_emb = gstack["embed"]["w"][0]
+    if spec.tie_embeddings and pp > 1:
+        g_emb = g_emb + gstack["embed"]["w"][pp - 1]
+    out["embed"] = {"w": g_emb}
+    out["final_norm"] = {"scale": gstack["final_norm"]["scale"][pp - 1]}
+    if "head" in params:
+        out["head"] = {"w": gstack["head"]["w"][pp - 1]}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SPMD stage apply (union slots, masked) — the executor's layer stack
+# ---------------------------------------------------------------------------
+
+def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
+                x: jnp.ndarray, positions: jnp.ndarray, mask: jnp.ndarray,
+                moe_flag: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One union layer slot.  ``mask`` (scalar f32) turns pad slots into the
+    identity; ``moe_flag`` selects the MoE vs dense-MLP branch when the model
+    mixes kinds (only the selected branch receives gradient)."""
+    gemma = spec.name.startswith("gemma")
+    window = spec.sliding_window
+    h1 = rmsnorm(p["ln1"], x, spec.norm_eps, gemma_style=gemma)
+    if spec.attention == AttentionKind.MLA:
+        mix = M.mla_forward(p["attn"], spec, h1, positions,
+                            impl=opts.attn_impl)
+    else:
+        mix = A.gqa_forward(p["attn"], spec, h1, positions,
+                            impl=opts.attn_impl, window=window)
+    x = x + mix * mask.astype(x.dtype)
+    h2 = rmsnorm(p["ln2"], x, spec.norm_eps, gemma_style=gemma)
+    aux = jnp.zeros((), jnp.float32)
+    has_mlp, has_moe = "mlp" in p, "moe" in p
+    if has_moe:
+        out = moe_forward(p["moe"], spec, h2,
+                          capacity_factor=opts.capacity_factor,
+                          router_impl=opts.router_impl)
+        sel = moe_flag.astype(x.dtype)
+        delta = out.y * sel
+        if has_mlp:
+            delta = delta + mlp_apply(p["mlp"], spec, h2) * (1 - sel)
+        aux = out.aux_loss * moe_flag * mask
+    elif has_mlp:
+        delta = mlp_apply(p["mlp"], spec, h2)
+    else:
+        delta = jnp.zeros_like(x)
+    x = x + delta * mask.astype(x.dtype)
+    return x, aux
+
+
+def pipeline_stage_apply(layers_p: PyTree, spec: ModelSpec,
+                         opts: ModelOptions, x: jnp.ndarray,
+                         positions: jnp.ndarray, mask: jnp.ndarray,
+                         moe_flag: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan this stage's l_max union slots.  ``layers_p`` leaves are
+    (l_max, ...); ``mask``/``moe_flag`` are (l_max,)."""
+
+    def body(carry, inp):
+        xc, aux = carry
+        p_slot, m, f = inp
+        xc, a = _slot_apply(p_slot, spec, opts, xc, positions, m, f)
+        return (xc, aux + a), None
+
+    body = _remat(body, opts.recompute)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (layers_p, mask, moe_flag))
+    return x, aux

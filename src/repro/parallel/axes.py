@@ -21,9 +21,11 @@ Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
 _state = threading.local()
 
 # Default mapping for the production meshes (see launch/mesh.py):
-#   single-pod (16,16) axes ("data","model"); multi-pod (2,16,16) adds "pod".
+#   single-pod (16,16) axes ("data","model"); multi-pod (2,16,16) adds "pod";
+#   pp>1 carves a leading "pipe" axis out of data: (pp, 16/pp, 16).
 # The "pod" axis extends data parallelism (DP-major, the paper's DP·EDP
-# grouping); "model" carries TP + EP (+ SP for sequence-resident tensors).
+# grouping); "model" carries TP + EP (+ SP for sequence-resident tensors);
+# "pipe" holds the stage dim of stage-stacked pipeline params.
 DEFAULT_RULES: Rules = {
     "batch": ("pod", "data"),
     "seq": None,
@@ -39,7 +41,7 @@ DEFAULT_RULES: Rules = {
     "dp_shard": ("pod", "data"),   # ZeRO sharding axis for state pytrees
     "conv": None,
     "lowrank": None,
-    "stage": None,            # PP stage axis (analytical; optional "pod")
+    "stage": "pipe",          # PP stage dim of stage-stacked pipeline params
 }
 
 

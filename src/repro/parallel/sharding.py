@@ -146,6 +146,24 @@ def add_dp_axes(spec: P, shape: Sequence[int], mesh: Mesh,
     return spec
 
 
+def pipeline_stage_specs(stacked: PyTree, mesh: Mesh, rules=None) -> PyTree:
+    """PartitionSpec tree for stage-stacked pipeline params
+    (``models.pipeline.stack_pipeline_params``): the leading stage dim maps to
+    the ``pipe`` mesh axis; remaining dims follow the usual §3 leaf rules
+    (so per-stage TP still applies on meshes that carry a model axis).  ZeRO
+    DP-sharding within a stage is unchanged — apply ``add_dp_axes`` on top
+    exactly as for pp=1 state."""
+
+    def spec_for(path, leaf):
+        axes = _leaf_axes(path, leaf.ndim)
+        base = param_partition_spec(axes, mesh, rules)
+        entries = list(tuple(base) + (None,) * (leaf.ndim - len(tuple(base))))
+        entries[0] = "pipe" if "pipe" in mesh.axis_names else None
+        return _drop_indivisible(P(*entries), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec_for, stacked)
+
+
 def state_shardings(abstract_state, mesh: Mesh, zero: ZeROStage,
                     rules=None):
     """NamedSharding trees for a TrainState (params, master/m/v, step).

@@ -1,3 +1,5 @@
 from .loop import TrainConfig, make_train_step, train
+from .pipeline_loop import make_pipeline_train_step
 
-__all__ = ["TrainConfig", "make_train_step", "train"]
+__all__ = ["TrainConfig", "make_pipeline_train_step", "make_train_step",
+           "train"]

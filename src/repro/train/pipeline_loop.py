@@ -1,0 +1,238 @@
+"""Pipeline-parallel train step: GPipe fill + 1F1B steady state over the
+``pipe`` mesh axis.
+
+One SPMD program (``shard_map``): every device holds one stage's slice of the
+stage-stacked parameters (``models.pipeline.stack_pipeline_params``) and runs
+the same tick loop; stage identity is ``lax.axis_index('pipe')``.  A tick t
+pairs one (masked) forward with one (masked) backward:
+
+  forward  of microbatch  m_f = t - d             on stage d,
+  backward of microbatch  m_b = t - 2(pp-1) + d   on stage d,
+
+so microbatches fill the pipeline GPipe-style (stage d idles until t = d),
+the last stage runs its first backward in the same tick as its first forward
+(the 1F1B hand-off), and upstream stages drain afterwards.  Boundary
+activations travel downstream and activation-gradients upstream via one
+``lax.ppermute`` each per tick.  Total ticks T = n_micro + 2(pp-1).
+
+Backward is *manual* (the tick loop is not differentiated): each stage keeps
+a ring of its in-flight boundary inputs, recomputes its forward for the
+microbatch being retired, and pulls gradients through ``jax.vjp`` with the
+downstream cotangent — stage-granular recompute, the standard JAX pipeline
+construction.  In-flight boundary inputs per stage are bounded by
+min(n_micro, 2·pp-1) and decrease toward the last stage; the analytical
+model's canonical 1F1B counts (``core.one_f1b_in_flight``: pp - stage) share
+the same monotone shape, which is what the per-stage memory validation
+checks.
+
+Semantics match ``train.loop.make_train_step``: fp32 gradient accumulation
+across microbatches, mean over n_micro, one AdamW update, loss metric
+ce + 0.01·aux per microbatch.  ``TrainState`` keeps the pp=1 layout — grads
+are unstacked back before the update — so optimizer, checkpointing and the
+pp=1 path are untouched.
+
+Scope: mesh axes ('pipe',) or ('pipe', 'data'); TP inside a stage is not
+executed here (the per-stage dry-run programs cover TP via GSPMD).  MoE aux
+uses the scatter dispatch and is pmean'd across data shards.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.layers import embed_apply, rmsnorm
+from repro.models.model import Model
+from repro.models.pipeline import (check_pipeline_supported, partition,
+                                   pipeline_stage_apply,
+                                   stack_pipeline_params,
+                                   unstack_pipeline_grads)
+from repro.optim.adamw import TrainState, adamw_update
+from repro.parallel.compat import shard_map
+from repro.parallel.sharding import pipeline_stage_specs
+from repro.train.loop import TrainConfig, _split_micro
+
+PyTree = Any
+
+
+def _ce_mask(mask: Optional[jnp.ndarray], tokens: jnp.ndarray) -> jnp.ndarray:
+    targets_shape = (tokens.shape[0], tokens.shape[1] - 1)
+    if mask is None:
+        return jnp.ones(targets_shape, jnp.float32)
+    m = mask[:, 1:] if mask.shape == tokens.shape else mask
+    return m.astype(jnp.float32)
+
+
+def _ce_sum(logits: jnp.ndarray, tokens: jnp.ndarray,
+            mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Unnormalized token-CE sum over the local batch shard (fp32), the
+    summand of Model.loss's masked mean."""
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1].astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum((logz - gold) * _ce_mask(mask, tokens))
+
+
+def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh):
+    """Build the jit-able 1F1B step for ``mesh`` (axes ('pipe'[, 'data']));
+    pp = mesh.shape['pipe'].  Same contract as ``make_train_step``."""
+    spec, opts = model.spec, model.opts
+    check_pipeline_supported(spec)
+    if "pipe" not in mesh.axis_names:
+        raise ValueError("pipeline step needs a 'pipe' mesh axis "
+                         "(launch.mesh.make_production_mesh(pp=...))")
+    if mesh.shape.get("model", 1) != 1:
+        raise NotImplementedError(
+            "1F1B executor runs TP=1 inside stages; per-stage TP memory is "
+            "covered by the dry-run's stage programs")
+    S = mesh.shape["pipe"]
+    part = partition(spec, S)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    M = cfg.n_micro
+    T = M + 2 * (S - 1)
+    B = min(M, 2 * S - 1)                 # boundary-input ring (in-flight cap)
+    gemma = spec.name.startswith("gemma")
+    masks_all = jnp.asarray(part.mask)
+    flags_all = jnp.asarray(part.moe_flag)
+
+    def _psum(x, axes):
+        return jax.lax.psum(x, axes) if axes else x
+
+    def _run(stacked: PyTree, slot_masks: jnp.ndarray,
+             slot_flags: jnp.ndarray, toks: jnp.ndarray,
+             mmask: Optional[jnp.ndarray]):
+        """shard_map body: returns (stage-stacked fp32 grads, loss_sum)."""
+        d = jax.lax.axis_index("pipe")
+        is_first, is_last = d == 0, d == S - 1
+        p = jax.tree.map(lambda a: jnp.squeeze(a, 0), stacked)
+        slot_mask, slot_flag = slot_masks[0], slot_flags[0]  # local stage row
+        _, b_loc, s = toks.shape
+        h = spec.h
+        adt = p["embed"]["w"].dtype
+
+        def stage_fn(p_, x_recv, tok, mm):
+            """Uniform per-stage program: embed (selected on stage 0), this
+            stage's union slots, head + local CE sum (meaningful on the last
+            stage, zero-cotangent elsewhere)."""
+            x0 = embed_apply(p_["embed"], tok, scale_by_dim=gemma, h=spec.h)
+            x = jnp.where(is_first, x0, x_recv)
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b_loc, s))
+            y, aux = pipeline_stage_apply(p_["layers"], spec, opts, x,
+                                          positions, slot_mask, slot_flag)
+            z = rmsnorm(p_["final_norm"], y, spec.norm_eps, gemma_style=gemma)
+            w_out = p_["embed"]["w"].T if spec.tie_embeddings \
+                else p_["head"]["w"]
+            logits = z @ w_out
+            return y, _ce_sum(logits, tok, mm), aux
+
+        def micro_at(arr, m):
+            return jax.lax.dynamic_index_in_dim(arr, m, 0, keepdims=False)
+
+        def count_g(tok, mm):
+            return _psum(jnp.sum(_ce_mask(mm, tok)), data_axes)
+
+        def tick(carry, t):
+            x_recv, dy, saved, g, loss, aux_acc = carry
+
+            # -- forward: microbatch m_f enters/advances ------------------
+            m_f = t - d
+            act_f = (m_f >= 0) & (m_f < M)
+            mf = jnp.clip(m_f, 0, M - 1)
+            tok_f = micro_at(toks, mf)
+            mm_f = None if mmask is None else micro_at(mmask, mf)
+            y, ce_sum, aux_f = stage_fn(p, x_recv, tok_f, mm_f)
+            ce_m = _psum(ce_sum, data_axes) / jnp.maximum(
+                count_g(tok_f, mm_f), 1.0)
+            fmask = act_f.astype(jnp.float32)
+            loss = loss + fmask * jnp.where(is_last, ce_m, 0.0)
+            aux_acc = aux_acc + fmask * aux_f
+            saved = jnp.where(
+                act_f,
+                jax.lax.dynamic_update_index_in_dim(saved, x_recv, mf % B, 0),
+                saved)
+
+            # -- backward: microbatch m_b retires (stage-recompute vjp) ---
+            m_b = t - 2 * (S - 1) + d
+            act_b = (m_b >= 0) & (m_b < M)
+            mb = jnp.clip(m_b, 0, M - 1)
+            tok_b = micro_at(toks, mb)
+            mm_b = None if mmask is None else micro_at(mmask, mb)
+            x_saved = micro_at(saved, mb % B)
+            _, vjp_fn = jax.vjp(lambda p_, x_: stage_fn(p_, x_, tok_b, mm_b),
+                                p, x_saved)
+            bmask = act_b.astype(jnp.float32)
+            dy_cot = jnp.where(act_b & (~is_last), dy,
+                               jnp.zeros((), dy.dtype))
+            dce = bmask * jnp.where(is_last, 1.0, 0.0) / jnp.maximum(
+                count_g(tok_b, mm_b), 1.0)
+            # aux is a per-data-shard token mean; the loss term is its pmean,
+            # so each shard's cotangent carries 1/data_size (the grads are
+            # psummed over the data axes below)
+            daux = 0.01 * bmask / data_size
+            dp, dx = vjp_fn((dy_cot, dce, daux))
+            g = jax.tree.map(lambda acc, gg: acc + gg.astype(jnp.float32),
+                             g, dp)
+
+            # -- boundary exchange ---------------------------------------
+            x_next = jax.lax.ppermute(y, "pipe",
+                                      [(i, i + 1) for i in range(S - 1)])
+            dy_next = jax.lax.ppermute(dx, "pipe",
+                                       [(i, i - 1) for i in range(1, S)])
+            return (x_next, dy_next, saved, g, loss, aux_acc), None
+
+        init = (jnp.zeros((b_loc, s, h), adt),
+                jnp.zeros((b_loc, s, h), adt),
+                jnp.zeros((B, b_loc, s, h), adt),
+                jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), p),
+                jnp.zeros((), jnp.float32),
+                jnp.zeros((), jnp.float32))
+        (_, _, _, g, loss, aux_acc), _ = jax.lax.scan(
+            tick, init, jnp.arange(T))
+
+        g = jax.tree.map(lambda a: _psum(a, data_axes)[None], g)
+        aux_acc = jax.lax.pmean(aux_acc, data_axes) if data_axes else aux_acc
+        loss_sum = jax.lax.psum(loss + 0.01 * aux_acc, "pipe")
+        return g, loss_sum
+
+    data_size = 1
+    for a in data_axes:
+        data_size *= mesh.shape[a]
+
+    def step(state: TrainState, batch: Dict[str, jnp.ndarray]
+             ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        micro = _split_micro(batch, M)
+        toks = micro["tokens"]
+        if toks.shape[1] % data_size:
+            raise ValueError(
+                f"micro-batch size {toks.shape[1]} must divide the data axes "
+                f"(size {data_size})")
+        stacked = stack_pipeline_params(state.params, spec, S)
+        stage_specs = pipeline_stage_specs(stacked, mesh)
+        dspec = tuple(data_axes) if data_axes else None
+        margs = (toks,)
+        mspecs = (P(None, dspec, None),)
+        if "mask" in micro:
+            margs += (micro["mask"],)
+            mspecs += (P(None, dspec, *(None,) * (micro["mask"].ndim - 2)),)
+
+        def inner(stacked_l, masks_l, flags_l, toks_l, *rest):
+            return _run(stacked_l, masks_l, flags_l, toks_l,
+                        rest[0] if rest else None)
+
+        g_st, loss_sum = shard_map(
+            inner, mesh=mesh,
+            in_specs=(stage_specs, P("pipe", None), P("pipe", None))
+            + mspecs,
+            out_specs=(stage_specs, P()),
+        )(stacked, masks_all, flags_all, *margs)
+        grads = unstack_pipeline_grads(g_st, state.params, spec, S)
+        grads = jax.tree.map(lambda a: a / M, grads)
+        new_state, opt_metrics = adamw_update(state, grads, cfg.adamw)
+        metrics = {"loss": loss_sum / M, **opt_metrics}
+        return new_state, metrics
+
+    return step

@@ -4,6 +4,9 @@ invariants — the system's core correctness surface."""
 import dataclasses
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property suite needs hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_spec

@@ -1,0 +1,144 @@
+"""Pipeline stage partitioning: the runtime's layer→stage assignment must be
+the analytical model's (Table 4), per-stage forwards must compose to the
+pp=1 forward bit-for-bit, and the stacked SPMD layout must round-trip."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_spec
+from repro.core import estimate_memory, one_f1b_in_flight, plan
+from repro.core.params import table4_stages
+from repro.core.parallel_config import ParallelConfig
+from repro.models import build_model
+from repro.models.pipeline import (check_pipeline_supported, make_stage_fn,
+                                   partition, stack_pipeline_params,
+                                   stage_params_slice, unstack_pipeline_grads)
+
+
+def _smoke(name, n_layers=None):
+    spec = get_spec(name, smoke=True)
+    if n_layers and spec.n_layers != n_layers:
+        spec = dataclasses.replace(spec, n_layers=n_layers)
+    return spec
+
+
+def test_partition_matches_table4():
+    for name, pp in [("qwen2-1.5b", 2), ("deepseek-v3", 2), ("deepseek-v3", 4)]:
+        spec = _smoke(name, 4)
+        part = partition(spec, pp)
+        assert [list(s) for s in part.stages] == \
+            [list(r.layers) for r in table4_stages(spec, pp)]
+    # the paper's PP16 split of the full 61-layer model: 15×4 + 1
+    ds = get_spec("deepseek-v3")
+    part = partition(ds, 16)
+    assert [len(s) for s in part.stages] == [4] * 15 + [1]
+
+
+def test_partition_slot_masks():
+    part = partition(get_spec("deepseek-v3"), 16)
+    assert part.mask.shape == (16, 4)
+    assert part.mask[:15].all() and part.mask[15, 0] == 1.0 \
+        and not part.mask[15, 1:].any()
+    # every layer owned exactly once
+    owned = [part.stages[part.stage_of[l]][part.slot_of[l]]
+             for l in range(part.n_layers)]
+    assert owned == list(range(part.n_layers))
+
+
+@pytest.mark.parametrize("name,pp", [("qwen2-1.5b", 2), ("qwen2-1.5b", 4),
+                                     ("deepseek-v3", 2), ("olmoe-1b-7b", 2)])
+def test_stage_chain_equals_full_forward(name, pp):
+    """Composing the heterogeneous per-stage forwards reproduces Model.forward
+    exactly — the contract the per-stage dry-run programs rely on."""
+    spec = _smoke(name, 4)
+    model = build_model(spec)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, spec.vocab)
+    x, aux = None, 0.0
+    for s in range(pp):
+        x, a = make_stage_fn(spec, model.opts, pp, s)(
+            stage_params_slice(params, spec, pp, s), x, toks)
+        aux = aux + a
+    logits, ref_aux = model.forward(params, {"tokens": toks})
+    np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                  np.asarray(logits, np.float32))
+    np.testing.assert_allclose(float(aux), float(ref_aux), rtol=1e-6)
+
+
+def test_stage_params_place_embed_and_head():
+    spec = _smoke("deepseek-v3")          # untied: distinct head
+    model = build_model(spec)
+    params = model.init(jax.random.PRNGKey(0))
+    s0 = stage_params_slice(params, spec, 2, 0)
+    s1 = stage_params_slice(params, spec, 2, 1)
+    assert "embed" in s0 and "embed" not in s1
+    assert "final_norm" in s1 and "final_norm" not in s0
+    assert ("head" in s1) == ("head" in params)
+
+
+@pytest.mark.parametrize("name", ["qwen2-1.5b", "deepseek-v3", "olmoe-1b-7b"])
+def test_stack_unstack_roundtrip(name):
+    """unstack(stack(params)) == params leaf-for-leaf (tied embeddings sum
+    their stage-0 and last-stage rows — the gradient-flow contract)."""
+    spec = _smoke(name, 4)
+    pp = 2
+    model = build_model(spec)
+    params = model.init(jax.random.PRNGKey(0))
+    rt = unstack_pipeline_grads(stack_pipeline_params(params, spec, pp),
+                                params, spec, pp)
+    fa, ta = jax.tree_util.tree_flatten(params)
+    fb, tb = jax.tree_util.tree_flatten(rt)
+    assert ta == tb
+    for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(params), fb):
+        mult = 2.0 if (spec.tie_embeddings and "embed" in str(path)) else 1.0
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32) * mult, np.asarray(b, np.float32))
+
+
+def test_pipeline_unsupported_families():
+    for name in ("rwkv6-1.6b", "whisper-tiny", "qwen2-vl-72b"):
+        with pytest.raises(NotImplementedError):
+            check_pipeline_supported(get_spec(name, smoke=True))
+
+
+def test_one_f1b_in_flight():
+    assert [one_f1b_in_flight(4, s) for s in range(4)] == [4, 3, 2, 1]
+    assert one_f1b_in_flight(4, 0, n_micro=2) == 2
+    assert one_f1b_in_flight(16, 15, n_micro=64) == 1
+    with pytest.raises(ValueError):
+        one_f1b_in_flight(4, 4)
+
+
+def test_estimate_memory_in_flight_scales_stage0():
+    spec = get_spec("deepseek-v3")
+    cfg = ParallelConfig(dp=32, tp=2, pp=16, ep=8, etp=1, sp=True,
+                         micro_batch=1, seq_len=4096)
+    base = [estimate_memory(spec, cfg, stage=s,
+                            in_flight_microbatches=one_f1b_in_flight(16, s)
+                            ).activations for s in (0, 15)]
+    assert base[0] >= base[1]
+    flat = estimate_memory(spec, cfg, stage=0).activations
+    assert base[0] == 16 * flat * \
+        estimate_memory(spec, cfg, stage=0,
+                        in_flight_microbatches=1).activations / flat
+
+
+def test_planner_headroom_and_pp_in_flight():
+    spec = get_spec("qwen2-1.5b")
+    budget = 32 * 2 ** 30
+    entries = plan(spec, 64, budget, top_k=5)
+    assert entries
+    for e in entries:
+        assert e.budget == budget
+        assert e.headroom == budget - e.estimate.total > 0
+    # 1F1B residency must not make a pp>1 config look lighter than the
+    # single-microbatch view
+    flat = plan(spec, 64, budget, top_k=64, pp_in_flight=False)
+    by_cfg = {e.cfg: e for e in flat}
+    for e in plan(spec, 64, budget, top_k=64, pp_in_flight=True):
+        if e.cfg in by_cfg and e.cfg.pp > 1:
+            assert e.estimate.activations >= by_cfg[e.cfg].estimate.activations
