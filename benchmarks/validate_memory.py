@@ -73,6 +73,10 @@ def validate_one(arch: str, shape: str, mesh_tag: str = "pod16x16",
 
     path = os.path.join(DRY, f"{arch}__{shape}__{mesh_tag}.json")
     if not os.path.exists(path):
+        # dryrun tags use the CLI arch spelling (dots as underscores)
+        path = os.path.join(
+            DRY, f"{arch.replace('.', '_')}__{shape}__{mesh_tag}.json")
+    if not os.path.exists(path):
         return None
     with open(path) as f:
         rec = json.load(f)
@@ -124,20 +128,26 @@ def validate_one(arch: str, shape: str, mesh_tag: str = "pod16x16",
 
 
 def validate_pp(arch: str, shape: str, pp: int,
-                mesh_tag: str = "pod16x16",
+                mesh_tag: str = "pod16x16", schedule: str = "1f1b",
+                n_chunks: int = 1,
                 tag_suffix: str = "") -> Optional[Dict[str, Any]]:
-    """Per-stage validation of a ``dryrun --pp N`` artifact: XLA's per-stage
-    temp bytes (activations + grads + transients of the stage program, which
-    holds the 1F1B in-flight microbatch count of that stage) against
-    ``estimate_memory(spec, cfg, stage=s, in_flight_microbatches=...)``.
+    """Per-rank validation of a ``dryrun --pp N [--schedule ...]`` artifact:
+    XLA's per-rank temp bytes (activations + grads + transients of the rank
+    program, which holds the schedule's in-flight microbatch counts for
+    that rank) against ``estimate_memory(spec, cfg, stage=r,
+    schedule=...)``.
 
-    The check is the paper's §6 in-flight-multiplier *direction*: stage 0
-    (pp microbatches resident) must not be lighter than the last stage
-    (1 resident) — in both the measured and the analytic column.  Run the
-    dry-run with ``--n-micro >= pp``; with fewer microbatches every stage
-    holds one in flight and the ratio degenerates to ~1."""
+    The check is the *direction* of the schedule's residency profile:
+    under 1f1b and interleaved, rank 0 must not be lighter than the last
+    rank (the §6 staircase); under dualpipe the analytic profile is
+    near-flat (≈ pp+1 everywhere) and the measured ratio must stay inside a
+    band around 1.  Run the dry-run with ``--n-micro >= pp``; with fewer
+    microbatches every rank holds one in flight and the ratio degenerates
+    to ~1."""
+    sched_tag = "" if schedule == "1f1b" else f"__{schedule}{n_chunks}"
     path = os.path.join(
-        DRY, f"{arch}__{shape}__{mesh_tag}__pp{pp}{tag_suffix}.json")
+        DRY,
+        f"{arch}__{shape}__{mesh_tag}__pp{pp}{sched_tag}{tag_suffix}.json")
     if not os.path.exists(path):
         return None
     with open(path) as f:
@@ -148,15 +158,18 @@ def validate_pp(arch: str, shape: str, pp: int,
 def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
     arch, shape, pp = rec["arch"], rec["shape"], rec["pp"]
     mesh_tag = rec["mesh"]
+    schedule = rec.get("schedule", "1f1b")
     if rec.get("status") != "ok":
         return {"arch": arch, "shape": shape, "pp": pp,
-                "status": rec.get("status")}
+                "schedule": schedule, "status": rec.get("status")}
     stages = rec["stages"]
     temps = [s["memory"].get("temp_size_in_bytes", 0) for s in stages]
     acts = [s["analytic"]["activations"] for s in stages]
-    # The last stage's temps also hold the fp32 logits/CE buffers the
-    # activation model deliberately excludes (same adjustment validate_one
-    # makes) — subtract the analytically known size before comparing shape.
+    # Ranks holding the last model chunk also hold the fp32 logits/CE
+    # buffers the activation model deliberately excludes (same adjustment
+    # validate_one makes) — subtract the analytically known size before
+    # comparing shape.  Under dualpipe both boundary ranks hold a head copy
+    # (rank pp-1 via the forward direction, rank 0 via the reverse).
     from repro.configs import get_spec
     from repro.launch.specs import SHAPES
     spec = get_spec(arch)
@@ -169,21 +182,33 @@ def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
     logits = b_dev * info["seq"] * spec.vocab * 4
     if spec.vocab % model_ax == 0:
         logits //= model_ax
+    head_ranks = {pp - 1} if schedule != "dualpipe" else {0, pp - 1}
     adj = list(temps)
-    adj[-1] = max(adj[-1] - logits, 1)
+    for r in head_ranks:
+        adj[r] = max(adj[r] - logits, 1)
+    m_ratio = adj[0] / max(adj[-1], 1)
+    a_ratio = acts[0] / max(acts[-1], 1)
+    if a_ratio > 1.05:          # analytic staircase falls (1f1b, interleaved)
+        direction_ok = adj[0] >= adj[-1]
+    elif a_ratio < 0.95:
+        direction_ok = adj[0] <= adj[-1]
+    else:                       # analytic near-flat (dualpipe)
+        direction_ok = 0.6 <= m_ratio <= 1.67
     return {
         "arch": arch, "shape": shape, "pp": pp, "status": "ok",
+        "schedule": schedule, "n_chunks": rec.get("n_chunks", 1),
         "n_micro": n_micro,
         "stages": [{
             "stage": s["stage"], "layers": s["layers"],
             "in_flight": s["in_flight"],
+            "chunks": s.get("chunks"),
             "xla_temp_bytes": temps[i],
             "analytic_act_bytes": acts[i],
             "analytic_total_bytes": s["analytic"]["total"],
         } for i, s in enumerate(stages)],
-        "measured_ratio_stage0_over_last": adj[0] / max(adj[-1], 1),
-        "analytic_ratio_stage0_over_last": acts[0] / max(acts[-1], 1),
-        "direction_ok": (adj[0] >= adj[-1]) and (acts[0] >= acts[-1]),
+        "measured_ratio_stage0_over_last": m_ratio,
+        "analytic_ratio_stage0_over_last": a_ratio,
+        "direction_ok": direction_ok,
     }
 
 
@@ -229,18 +254,20 @@ def main():
     if pp_rows:
         with open(os.path.join(ART, "validation_pp.json"), "w") as f:
             json.dump(pp_rows, f, indent=1)
-        print("\n## Per-stage 1F1B residency (dryrun --pp) vs "
-              "estimate_memory(stage=s)")
-        print("| arch | shape | pp | n_micro | stage0/last XLA (logits-adj) |"
-              " stage0/last analytic act | direction |")
-        print("|---|---|---|---|---|---|---|")
+        print("\n## Per-rank schedule residency (dryrun --pp --schedule) vs "
+              "estimate_memory(stage=r, schedule=...)")
+        print("| arch | shape | pp | schedule | n_micro |"
+              " rank0/last XLA (logits-adj) | rank0/last analytic act |"
+              " direction |")
+        print("|---|---|---|---|---|---|---|---|")
         for r in pp_rows:
             if r.get("status") != "ok":
-                print(f"| {r['arch']} | {r['shape']} | {r['pp']} | - | - | - |"
+                print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
+                      f" {r.get('schedule', '1f1b')} | - | - | - |"
                       f" {r.get('status')} |")
                 continue
             print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
-                  f" {r['n_micro']} |"
+                  f" {r['schedule']} | {r['n_micro']} |"
                   f" {r['measured_ratio_stage0_over_last']:.2f} |"
                   f" {r['analytic_ratio_stage0_over_last']:.2f} |"
                   f" {'ok' if r['direction_ok'] else 'MISMATCH'} |")

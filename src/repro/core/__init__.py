@@ -4,7 +4,8 @@ activations, buffers) plus a configuration planner built on it."""
 
 from .activations import (layer_activation_bytes, moe_activation_bytes,
                           mla_activation_bytes, one_f1b_in_flight,
-                          stage_activation_bytes, table10)
+                          rank_chunk_layers, schedule_activation_bytes,
+                          schedule_in_flight, stage_activation_bytes, table10)
 from .memory_model import MemoryEstimate, estimate_memory, fits, kv_cache_bytes
 from .notation import (AttentionKind, EncoderSpec, FamilyKind, MLASpec,
                        MlpKind, MoESpec, ModelSpec, SSMSpec, human_bytes,
@@ -15,6 +16,8 @@ from .parallel_config import (BF16_POLICY, FP8_POLICY, PAPER_CONFIG,
 from .params import (DeviceParams, device_params, max_stage, table3_rows,
                      table4_stages, total_params_paper)
 from .planner import enumerate_configs, min_memory_config, plan
+from .schedules import (SCHEDULES, PipelineSchedule, TickOp, make_schedule,
+                        n_model_chunks, schedule_placement)
 from .zero import TrainStateBytes, zero_memory, zero_table
 
 __all__ = [
@@ -22,11 +25,13 @@ __all__ = [
     "EncoderSpec", "FP8_POLICY", "FamilyKind", "MLASpec", "MemoryEstimate",
     "MlpKind", "MoESpec", "ModelSpec", "PAPER_CONFIG", "ParallelConfig",
     "RecomputePolicy", "SSMSpec", "TrainStateBytes", "ZeROStage",
+    "PipelineSchedule", "SCHEDULES", "TickOp",
     "device_params", "enumerate_configs", "estimate_memory", "fits",
     "human_bytes", "human_count", "kv_cache_bytes", "layer_activation_bytes",
-    "max_stage", "min_memory_config", "mla_activation_bytes",
-    "moe_activation_bytes", "one_f1b_in_flight", "plan",
-    "stage_activation_bytes", "table10",
+    "make_schedule", "max_stage", "min_memory_config", "mla_activation_bytes",
+    "moe_activation_bytes", "n_model_chunks", "one_f1b_in_flight", "plan",
+    "rank_chunk_layers", "schedule_activation_bytes", "schedule_in_flight",
+    "schedule_placement", "stage_activation_bytes", "table10",
     "table3_rows", "table4_stages", "total_params_paper", "zero_memory",
     "zero_table",
 ]

@@ -195,11 +195,57 @@ def one_f1b_in_flight(pp: int, stage: int, n_micro: Optional[int] = None) -> int
     1F1B schedule: stage s holds pp - s warmup forwards before its first
     backward frees one, capped by the number of microbatches.  Stage 0 is the
     worst case (pp in flight), the last stage holds exactly 1 — the
-    stage-dependent multiplier the paper's §6 tables assume."""
-    if not 0 <= stage < pp:
-        raise ValueError(f"stage {stage} outside [0, {pp})")
-    resident = pp - stage
-    return min(n_micro, resident) if n_micro is not None else resident
+    stage-dependent multiplier the paper's §6 tables assume.
+
+    Kept as the canonical special case; ``schedule_in_flight`` generalizes it
+    across schedules."""
+    return schedule_in_flight(pp, stage, n_micro, schedule="1f1b")
+
+
+def schedule_in_flight(pp: int, rank: int, n_micro: Optional[int] = None, *,
+                       schedule: str = "1f1b", n_chunks: int = 1) -> int:
+    """Peak in-flight (activation-resident) microbatch×chunk units on PP
+    ``rank`` under ``schedule`` — the closed forms the tick simulator
+    (``core.schedules``) is property-tested against:
+
+    * ``1f1b``:        min(M, pp - rank)
+    * ``interleaved``: min(M·v, (v-1)·pp + 2·(pp - rank - 1) + 1)
+      (each unit is one of the rank's v *chunks*, ~1/v of its layers)
+    * ``dualpipe``:    min(⌈M/2⌉, pp - rank) + min(⌊M/2⌋, rank + 1)
+      (≈ pp + 1 on every rank — DualPipe's near-flat profile)
+
+    ``n_micro=None`` gives the M→∞ steady-state value.
+    """
+    from .schedules import norm_chunks  # shared validation
+    if not 0 <= rank < pp:
+        raise ValueError(f"rank {rank} outside [0, {pp})")
+    v = norm_chunks(schedule, n_chunks)
+    if schedule == "1f1b":
+        resident = pp - rank
+        return min(n_micro, resident) if n_micro is not None else resident
+    if schedule == "interleaved":
+        resident = (v - 1) * pp + 2 * (pp - rank - 1) + 1
+        return min(n_micro * v, resident) if n_micro is not None else resident
+    # dualpipe
+    ma = (n_micro + 1) // 2 if n_micro is not None else pp
+    mb = n_micro // 2 if n_micro is not None else pp
+    return min(ma, pp - rank) + min(mb, rank + 1)
+
+
+def layers_activation_bytes(spec: ModelSpec, cfg: ParallelConfig,
+                             layers) -> int:
+    """Activation bytes of one microbatch across ``layers``, applying the
+    recompute policy to the first ``recompute_fraction`` of them (paper §5's
+    'how many layers to recompute')."""
+    frac = cfg.recompute_fraction if cfg.recompute != RecomputePolicy.NONE \
+        else 0.0
+    n_rc = int(round(frac * len(layers)))
+    no_rc = dataclasses.replace(cfg, recompute=RecomputePolicy.NONE)
+    total = 0
+    for i, l in enumerate(layers):
+        c = cfg if i < n_rc else no_rc
+        total += layer_activation_bytes(spec, c, l).per_layer
+    return total
 
 
 def stage_activation_bytes(spec: ModelSpec, cfg: ParallelConfig,
@@ -218,15 +264,58 @@ def stage_activation_bytes(spec: ModelSpec, cfg: ParallelConfig,
         row = max(interior or stages, key=lambda r: r.params)
     else:
         row = stages[stage]
-    frac = cfg.recompute_fraction if cfg.recompute != RecomputePolicy.NONE \
-        else 0.0
-    n_rc = int(round(frac * len(row.layers)))
-    no_rc = dataclasses.replace(cfg, recompute=RecomputePolicy.NONE)
-    total = 0
-    for i, l in enumerate(row.layers):
-        c = cfg if i < n_rc else no_rc
-        total += layer_activation_bytes(spec, c, l).per_layer
-    return total * (in_flight or 1)
+    return layers_activation_bytes(spec, cfg, row.layers) * (in_flight or 1)
+
+
+def rank_chunk_layers(spec: ModelSpec, pp: int, *, schedule: str = "1f1b",
+                      n_chunks: int = 1):
+    """Per-rank tuple of layer-id tuples, one per local chunk: the model is
+    split into ``n_model_chunks`` contiguous pieces with the same Table-4
+    front-loaded rule as plain PP (``params.pp_stage_layers``), then placed
+    by ``core.schedules.schedule_placement``.  Under dualpipe every model
+    chunk appears on two ranks (the schedule's 2× parameter cost)."""
+    from .params import pp_stage_layers
+    from .schedules import n_model_chunks, schedule_placement
+    if schedule == "dualpipe" and pp < 2:
+        raise ValueError("dualpipe needs pp >= 2 (pp=1 would duplicate the "
+                         "whole model onto one rank)")
+    g = n_model_chunks(schedule, pp, n_chunks)
+    if g > spec.n_layers:
+        raise ValueError(f"{g} model chunks need n_layers >= {g} "
+                         f"(got {spec.n_layers})")
+    pieces = pp_stage_layers(spec.n_layers, g)
+    placement = schedule_placement(schedule, pp, n_chunks)
+    return tuple(tuple(tuple(pieces[cid]) for cid in row)
+                 for row in placement)
+
+
+def schedule_activation_bytes(spec: ModelSpec, cfg: ParallelConfig,
+                              rank: int, *, schedule: str = "1f1b",
+                              n_chunks: int = 1,
+                              n_micro: Optional[int] = None) -> int:
+    """Schedule-aware peak activation residency (bytes) on PP ``rank``.
+
+    Time-resolved: the tick simulator gives each chunk's in-flight count
+    k_c(t); the reported peak is max_t Σ_c k_c(t)·bytes(chunk c), which is
+    ≤ the sum of per-chunk peaks (chunks of a rank do not all peak at the
+    same tick under interleaving).  For 1f1b this reduces exactly to
+    ``stage_activation_bytes(stage=rank, in_flight=min(M, pp-rank))``.
+
+    ``n_micro=None`` uses M = 2·pp (rounded up to a pp multiple), enough to
+    reach every schedule's steady-state plateau.
+    """
+    from .schedules import make_schedule
+    pp = cfg.pp
+    if n_micro is None:
+        n_micro = 2 * pp
+    chunks = rank_chunk_layers(spec, pp, schedule=schedule,
+                               n_chunks=n_chunks)[rank]
+    weights = [layers_activation_bytes(spec, cfg, ls) for ls in chunks]
+    if pp == 1:
+        return sum(weights)          # no pipeline: one microbatch resident
+    sched = make_schedule(schedule, pp, n_micro, n_chunks=len(chunks))
+    peak, _ = sched.peak_profile(rank, weights)
+    return int(peak)
 
 
 def table10(spec: ModelSpec, cfg: ParallelConfig) -> Dict[str, Dict[str, int]]:

@@ -55,12 +55,51 @@ class MemoryEstimate:
 def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
                     stage: Optional[int] = None,
                     in_flight_microbatches: Optional[int] = None,
-                    training: bool = True) -> MemoryEstimate:
+                    training: bool = True,
+                    schedule: Optional[str] = None,
+                    n_chunks: int = 1,
+                    n_micro: Optional[int] = None) -> MemoryEstimate:
     """Per-device memory estimate for one PP stage.
 
     ``training=False`` models inference/serving: no grads/optimizer, and the
     'activations' term is the KV-cache / recurrent-state working set.
+
+    ``schedule`` (one of ``core.schedules.SCHEDULES``) switches to
+    schedule-aware accounting for PP rank ``stage``: activations come from
+    the tick simulator's time-resolved in-flight peak
+    (``schedule_activation_bytes``), and params/grads/optimizer cover every
+    layer chunk the rank holds under that schedule — under ``dualpipe`` each
+    rank holds two model chunks, the schedule's 2× parameter cost; under
+    ``interleaved`` a rank holds ``n_chunks`` virtual stages.  The plain
+    ``stage=``/``in_flight_microbatches=`` path is the schedule-unaware
+    paper view and is unchanged.
     """
+    if schedule is not None and not training:
+        raise ValueError(
+            "schedule-aware accounting models training residency; for "
+            "inference sizing of a multi-chunk rank pass the rank's layer "
+            "list via device_params(layers=...) instead")
+    if schedule is not None and in_flight_microbatches is not None:
+        raise ValueError(
+            "in_flight_microbatches conflicts with schedule=: the schedule "
+            "path derives residency from its own tick stream — cap it with "
+            "n_micro= instead")
+    if schedule is not None:
+        from .activations import rank_chunk_layers, schedule_activation_bytes
+        rank = stage if stage is not None else 0
+        chunks = rank_chunk_layers(spec, cfg.pp, schedule=schedule,
+                                   n_chunks=n_chunks)[rank]
+        layers = [l for ls in chunks for l in ls]
+        state = zero_memory(spec, cfg, layers=layers)
+        params, grads, opt = state.params, state.grads, state.optimizer
+        acts = schedule_activation_bytes(spec, cfg, rank, schedule=schedule,
+                                         n_chunks=n_chunks, n_micro=n_micro)
+        subtotal = params + grads + opt + acts + cfg.comm_buffer_bytes
+        frag = int(subtotal * cfg.fragmentation)
+        return MemoryEstimate(params=params, grads=grads, optimizer=opt,
+                              activations=acts,
+                              comm_buffers=cfg.comm_buffer_bytes,
+                              fragmentation=frag)
     state = zero_memory(spec, cfg, stage=stage)
     if not training:
         dev = device_params(spec, cfg, stage=stage)

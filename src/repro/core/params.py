@@ -219,18 +219,25 @@ def attn_tp_split(spec: ModelSpec, tp: int) -> Tuple[int, int]:
 
 
 def device_params(spec: ModelSpec, cfg: ParallelConfig,
-                  stage: int = None) -> DeviceParams:
+                  stage: int = None,
+                  layers: Sequence[int] = None) -> DeviceParams:
     """Static parameters per device for one PP stage (default: the largest
-    all-MoE stage, as the paper's §3 case study uses stages 1-14)."""
-    stages = table4_stages(spec, cfg.pp)
-    if stage is None:
-        # paper picks a maximal interior stage (no embedding): stages 1-14
-        interior = [r for r in stages if 0 not in r.layers
-                    and (spec.n_layers - 1) not in r.layers]
-        row = max(interior or stages, key=lambda r: r.params)
-    else:
-        row = stages[stage]
-    layers = row.layers
+    all-MoE stage, as the paper's §3 case study uses stages 1-14).
+
+    ``layers`` overrides the Table-4 stage row with an explicit layer-id
+    list — the schedule-aware path uses it for ranks that hold several
+    chunks (interleaved virtual stages; dualpipe's duplicated stages, where
+    a layer id appearing twice is counted twice — the 2× parameter cost)."""
+    if layers is None:
+        stages = table4_stages(spec, cfg.pp)
+        if stage is None:
+            # paper picks a maximal interior stage (no embedding): stages 1-14
+            interior = [r for r in stages if 0 not in r.layers
+                        and (spec.n_layers - 1) not in r.layers]
+            row = max(interior or stages, key=lambda r: r.params)
+        else:
+            row = stages[stage]
+        layers = row.layers
 
     norms = attn_tp = attn_repl = dense = router = experts = ssm = embed = 0
     for l in layers:

@@ -6,6 +6,24 @@ a world size, enumerate feasible (TP, PP, EP, ZeRO, recompute, micro-batch)
 configurations and rank them — fewest-recompute-first (recompute trades ~30%
 step FLOPs for memory), then widest micro-batch, then least model-parallel
 fragmentation.
+
+Public entry points:
+
+* ``enumerate_configs(spec, world_size, *, seq_len, micro_batches, max_tp,
+  zero_stages, recompute, sp)`` — every coherent ``ParallelConfig`` tiling
+  ``world_size`` devices (PP ≤ n_layers, TP | n_heads, EP | n_experts).
+* ``plan(spec, world_size, hbm_bytes, *, seq_len, top_k, pp_in_flight,
+  schedule, n_chunks)`` — feasible configs under the HBM budget,
+  best-first, each as a ``PlanEntry`` carrying its ``MemoryEstimate`` and
+  ``headroom`` against the budget.  ``pp_in_flight`` prices pp>1 configs
+  at the pipeline schedule's steady-state residency (default plain 1F1B;
+  ``schedule='interleaved'|'dualpipe'`` uses the schedule-aware
+  ``estimate_memory`` — see ``docs/pipeline-schedules.md``).
+* ``min_memory_config(spec, world_size)`` — the single lightest config,
+  budget-free.
+
+The planner writes no artifacts; ``benchmarks/run.py`` and
+``examples/memory_planner.py`` print its tables.
 """
 
 from __future__ import annotations
@@ -71,23 +89,49 @@ def enumerate_configs(spec: ModelSpec, world_size: int, *,
 
 def plan(spec: ModelSpec, world_size: int, hbm_bytes: int, *,
          seq_len: int = 4096, top_k: int = 10, pp_in_flight: bool = True,
+         schedule: str = "1f1b", n_chunks: int = 1,
          **enum_kw) -> List[PlanEntry]:
     """Feasible configs under the HBM budget, best-first.
 
     Ranking: least recompute, largest micro-batch, least TP*PP (model-parallel
     keeps devices busier when avoidable), then most headroom.
 
-    ``pp_in_flight`` sizes activations for the 1F1B steady state (the
-    runtime's schedule): the worst stage holds ``one_f1b_in_flight(pp, 0)``
-    = pp microbatches, not 1 — without it the planner admits pp>1 configs the
-    executor would OOM.  Set False for the paper's single-microbatch view.
+    ``pp_in_flight`` sizes activations for the pipeline schedule's steady
+    state (the runtime's behaviour): under the default ``schedule='1f1b'``
+    the worst stage holds ``one_f1b_in_flight(pp, 0)`` = pp microbatches,
+    not 1 — without it the planner admits pp>1 configs the executor would
+    OOM.  Set False for the paper's single-microbatch view.
+
+    ``schedule`` ∈ {1f1b, interleaved, dualpipe} ranks against that
+    schedule's worst rank via the schedule-aware ``estimate_memory``,
+    maxing over *all* ranks — rank 0 is not reliably the heaviest: under
+    dualpipe an interior rank can hold a larger stage pair, and under
+    interleaved a back rank's chunks can carry the parameter-heavy (MoE)
+    layers.  Interleaved (with ``n_chunks`` virtual stages) raises the
+    in-flight ceiling to ``(v-1)·pp + 2pp - 1`` chunk units; dualpipe
+    doubles parameter state and flattens activations to ~pp+1.  The
+    default keeps the legacy 1F1B ranking bit-for-bit.
     """
+    if schedule != "1f1b":
+        from .schedules import norm_chunks
+        norm_chunks(schedule, n_chunks)   # reject bad schedule/n_chunks now,
+        # so the per-config skip below only ever hides configs that are
+        # genuinely infeasible (pp * n_chunks > n_layers), not typos
     order_r = {RecomputePolicy.NONE: 0, RecomputePolicy.SELECTIVE: 1,
                RecomputePolicy.FULL: 2}
     entries: List[PlanEntry] = []
     for cfg in enumerate_configs(spec, world_size, seq_len=seq_len, **enum_kw):
-        in_flight = one_f1b_in_flight(cfg.pp, 0) if pp_in_flight else None
-        est = estimate_memory(spec, cfg, in_flight_microbatches=in_flight)
+        if pp_in_flight and schedule != "1f1b" and cfg.pp > 1:
+            try:
+                est = max((estimate_memory(spec, cfg, stage=r,
+                                           schedule=schedule,
+                                           n_chunks=n_chunks)
+                           for r in range(cfg.pp)), key=lambda e: e.total)
+            except ValueError:      # pp * n_chunks > n_layers (or dualpipe pp=1)
+                continue
+        else:
+            in_flight = one_f1b_in_flight(cfg.pp, 0) if pp_in_flight else None
+            est = estimate_memory(spec, cfg, in_flight_microbatches=in_flight)
         if est.total <= hbm_bytes:
             entries.append(PlanEntry(cfg, est, budget=hbm_bytes))
     entries.sort(key=lambda e: (order_r[e.cfg.recompute], -e.cfg.micro_batch,

@@ -1,0 +1,416 @@
+"""Pipeline-schedule tick emission (the schedule axis of the memory model).
+
+PR 1 hard-coded one answer to "how many microbatches does a PP stage hold in
+flight" — plain 1F1B's ``pp - stage``.  This module makes the schedule a
+first-class object: a :class:`PipelineSchedule` emits, for every rank, a
+sequence of ticks (forward/backward of which microbatch on which local layer
+chunk), and everything downstream derives from that single tick stream:
+
+* the analytic in-flight accounting (``core.activations.schedule_in_flight``
+  and the time-resolved ``schedule_activation_bytes``),
+* the runtime executor tables (``train.schedules.build_exec_tables``),
+* the per-rank dry-run probes (``launch.dryrun --pp N --schedule ...``),
+* the tick diagrams in ``docs/pipeline-schedules.md``.
+
+Three schedules are implemented:
+
+``1f1b``
+    Plain GPipe-fill + 1F1B steady state (one layer chunk per rank).  Rank r
+    holds ``min(M, pp - r)`` microbatches in flight — the paper's §6
+    stage-dependent activation multiplier.
+
+``interleaved``
+    Megatron-style interleaved 1F1B over ``v`` virtual stages: the model is
+    split into ``pp*v`` chunks and rank r owns chunks ``{r, pp+r, 2pp+r, …}``.
+    Microbatches are processed in groups of ``pp`` per chunk (requires
+    ``n_micro % pp == 0``); rank r's peak in-flight rises to
+    ``min(M*v, (v-1)*pp + 2*(pp-r-1) + 1)`` *chunk* activations, each chunk
+    carrying ~1/v of the rank's layers — the schedule trades bubble for a
+    shallower, higher staircase (arXiv:2411.06465's schedule axis).
+
+``dualpipe``
+    DualPipe-style bidirectional schedule (arXiv:2505.09343): the model is
+    split into ``pp`` stages but every rank holds TWO chunks — stage ``r``
+    (forward direction) and stage ``pp-1-r`` (reverse direction) — and
+    microbatches are fed from both ends.  This reproduces DualPipe's memory
+    signature: 2× parameters and a near-flat in-flight profile
+    ``min(⌈M/2⌉, pp-r) + min(⌊M/2⌋, r+1)`` ≈ ``pp+1`` on every rank.  We
+    model the *alternating* variant (even ticks run the forward direction,
+    odd ticks the reverse), which keeps the memory profile of DualPipe
+    without its overlapped dual-stream compute.
+
+Time model: canonical ticks are ONE op (F or B) per rank per tick, the unit
+the in-flight literature uses; the runtime executor compresses this to one
+F *and* one B per tick (see ``train.schedules``).  Both timelines are
+emitted from the same per-rank op orders by :func:`assign_ticks`.
+
+Everything here is pure Python/numpy (no jax) so ``core`` stays the lowest
+layer of the package graph (see ``docs/architecture.md``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+SCHEDULES = ("1f1b", "interleaved", "dualpipe")
+
+
+@dataclasses.dataclass(frozen=True)
+class TickOp:
+    """One scheduled operation: at tick ``t`` rank ``rank`` runs a forward
+    (``op='F'``) or backward (``op='B'``) of ``micro`` on its local layer
+    chunk ``chunk`` (which holds global model chunk ``stage``)."""
+
+    t: int
+    rank: int
+    op: str          # 'F' | 'B'
+    micro: int
+    stage: int       # global model-chunk id, 0..n_stages-1 (traversal order)
+    chunk: int       # local chunk index on the rank, 0..n_chunks-1
+
+
+def schedule_placement(schedule: str, pp: int, n_chunks: int = 1
+                       ) -> Tuple[Tuple[int, ...], ...]:
+    """(pp, v) map: global model-chunk id held by (rank, local chunk).
+
+    1f1b: v=1, rank r holds chunk r.  interleaved: v chunks, rank r holds
+    ``c*pp + r``.  dualpipe: v=2 over ``pp`` model chunks, rank r holds
+    ``(r, pp-1-r)`` — model chunks are *duplicated* across two ranks (the
+    2×-parameter cost of DualPipe)."""
+    v = norm_chunks(schedule, n_chunks)
+    if schedule == "1f1b":
+        return tuple((r,) for r in range(pp))
+    if schedule == "interleaved":
+        return tuple(tuple(c * pp + r for c in range(v)) for r in range(pp))
+    if schedule == "dualpipe":
+        return tuple((r, pp - 1 - r) for r in range(pp))
+    raise ValueError(f"unknown schedule {schedule!r}; pick from {SCHEDULES}")
+
+
+def n_model_chunks(schedule: str, pp: int, n_chunks: int = 1) -> int:
+    """Number of (contiguous) model partitions the schedule runs over."""
+    v = norm_chunks(schedule, n_chunks)
+    return pp if schedule == "dualpipe" else pp * v
+
+
+def norm_chunks(schedule: str, n_chunks: int) -> int:
+    if schedule == "1f1b":
+        if n_chunks != 1:
+            raise ValueError("1f1b uses n_chunks=1")
+        return 1
+    if schedule == "dualpipe":
+        if n_chunks not in (1, 2):
+            raise ValueError("dualpipe uses exactly 2 chunks per rank")
+        return 2
+    if schedule == "interleaved":
+        if n_chunks < 2:
+            raise ValueError("interleaved needs n_chunks >= 2 "
+                             "(n_chunks=1 is plain 1f1b)")
+        return n_chunks
+    raise ValueError(f"unknown schedule {schedule!r}; pick from {SCHEDULES}")
+
+
+# ---------------------------------------------------------------------------
+# Per-rank op orders (the schedule *policy*, timing-free)
+# ---------------------------------------------------------------------------
+
+# An op is ('F'|'B', micro, stage).  Each rank runs a list of queues; ops
+# within a queue execute strictly in order, queues are independent (dualpipe
+# uses one queue per direction).  ``parity`` restricts a queue's ops to
+# even (0) / odd (1) ticks.
+
+@dataclasses.dataclass(frozen=True)
+class _Queue:
+    ops: Tuple[Tuple[str, int, int], ...]
+    chunk: Dict[int, int]          # stage -> local chunk on this rank
+    parity: Optional[int] = None
+
+
+def _order_1f1b_pos(pp: int, pos: int, micros: Sequence[int],
+                    stage: int) -> List[Tuple[str, int, int]]:
+    """1F1B op order for a rank sitting at pipeline *position* ``pos``
+    (0 = feeds first) of a ``pp``-deep pipeline, running model chunk
+    ``stage`` for the given microbatch ids."""
+    M = len(micros)
+    warm = min(M, pp - 1 - pos)
+    out: List[Tuple[str, int, int]] = []
+    out += [("F", micros[m], stage) for m in range(warm)]
+    for m in range(warm, M):
+        out.append(("F", micros[m], stage))
+        out.append(("B", micros[m - warm], stage))
+    for m in range(M - warm, M):
+        out.append(("B", micros[m], stage))
+    return out
+
+
+def _orders(schedule: str, pp: int, n_micro: int, v: int
+            ) -> List[List[_Queue]]:
+    """Per-rank queues of ops for the schedule."""
+    if schedule == "1f1b":
+        return [[_Queue(tuple(_order_1f1b_pos(pp, r, range(n_micro), r)),
+                        {r: 0})]
+                for r in range(pp)]
+
+    if schedule == "dualpipe":
+        if pp < 2:
+            raise ValueError("dualpipe needs pp >= 2")
+        ma = (n_micro + 1) // 2
+        a_micros = list(range(ma))                  # direction A: ranks 0..pp-1
+        b_micros = list(range(ma, n_micro))         # direction B: ranks pp-1..0
+        out = []
+        for r in range(pp):
+            qa = _Queue(tuple(_order_1f1b_pos(pp, r, a_micros, r)),
+                        {r: 0}, parity=0)
+            qb = _Queue(tuple(_order_1f1b_pos(pp, pp - 1 - r, b_micros,
+                                              pp - 1 - r)),
+                        {pp - 1 - r: 1}, parity=1)
+            out.append([qa, qb])
+        return out
+
+    if schedule == "interleaved":
+        if n_micro % pp:
+            raise ValueError(
+                f"interleaved schedule needs n_micro % pp == 0 "
+                f"(got n_micro={n_micro}, pp={pp}) — Megatron's grouping")
+        total = n_micro * v
+        group = pp * v
+
+        def fwd_op(k: int, rank: int) -> Tuple[str, int, int]:
+            g, within = divmod(k, group)
+            chunk = within // pp
+            micro = g * pp + within % pp
+            return ("F", micro, chunk * pp + rank)
+
+        def bwd_op(k: int, rank: int) -> Tuple[str, int, int]:
+            g, within = divmod(k, group)
+            chunk = v - 1 - within // pp
+            micro = g * pp + within % pp
+            return ("B", micro, chunk * pp + rank)
+
+        out = []
+        for r in range(pp):
+            warm = min(total, 2 * (pp - r - 1) + (v - 1) * pp)
+            ops: List[Tuple[str, int, int]] = []
+            ops += [fwd_op(k, r) for k in range(warm)]
+            for k in range(warm, total):
+                ops.append(fwd_op(k, r))
+                ops.append(bwd_op(k - warm, r))
+            ops += [bwd_op(k, r) for k in range(total - warm, total)]
+            out.append([_Queue(tuple(ops), {c * pp + r: c for c in range(v)})])
+        return out
+
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+# ---------------------------------------------------------------------------
+# Greedy in-order tick assignment
+# ---------------------------------------------------------------------------
+
+def assign_ticks(orders: List[List[_Queue]], n_stages: int, *,
+                 fb_per_tick: bool) -> Dict[Tuple[str, int, int], int]:
+    """Assign a tick to every op, respecting (i) in-queue order, (ii) data
+    dependencies with one-tick transfer latency — F(m,g) strictly after
+    F(m,g-1), B(m,g) strictly after B(m,g+1) — and (iii) rank capacity.
+
+    ``fb_per_tick=False`` is the canonical timeline (one op per rank per
+    tick; B(m, last) strictly after F(m, last)); ``fb_per_tick=True`` is the
+    executor timeline (one F *and* one B per rank per tick; the last stage's
+    backward may share its forward's tick — the 1F1B hand-off)."""
+    assigned: Dict[Tuple[str, int, int], int] = {}
+    ptrs = [[0] * len(qs) for qs in orders]
+    remaining = sum(len(q.ops) for qs in orders for q in qs)
+    t = 0
+    limit = 8 * (remaining + n_stages + 8)
+    while remaining:
+        if t > limit:
+            raise RuntimeError("schedule deadlocked (invalid op order)")
+        for r, queues in enumerate(orders):
+            cap = {"F": 1, "B": 1} if fb_per_tick else {"all": 1}
+            progress = True
+            while progress:
+                progress = False
+                for qi, q in enumerate(queues):
+                    if q.parity is not None and t % 2 != q.parity:
+                        continue
+                    i = ptrs[r][qi]
+                    if i >= len(q.ops):
+                        continue
+                    kind, micro, stage = q.ops[i]
+                    ck = kind if fb_per_tick else "all"
+                    if cap[ck] <= 0:
+                        continue
+                    dep: Optional[Tuple[str, int, int]] = None
+                    same_tick_ok = False
+                    if kind == "F" and stage > 0:
+                        dep = ("F", micro, stage - 1)
+                    elif kind == "B":
+                        if stage == n_stages - 1:
+                            dep = ("F", micro, stage)
+                            same_tick_ok = fb_per_tick
+                        else:
+                            dep = ("B", micro, stage + 1)
+                    if dep is not None:
+                        td = assigned.get(dep)
+                        if td is None or not (td < t or (same_tick_ok
+                                                         and td <= t)):
+                            continue
+                    assigned[(kind, micro, stage)] = t
+                    ptrs[r][qi] += 1
+                    cap[ck] -= 1
+                    remaining -= 1
+                    progress = True
+        t += 1
+    return assigned
+
+
+# ---------------------------------------------------------------------------
+# The schedule object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSchedule:
+    """A fully-timed pipeline schedule: canonical per-rank tick stream plus
+    the placement both the runtime and the memory model consume."""
+
+    name: str
+    pp: int
+    n_micro: int
+    n_chunks: int                                  # v, local chunks per rank
+    placement: Tuple[Tuple[int, ...], ...]         # (pp, v) -> model chunk id
+    ticks: Tuple[TickOp, ...]                      # canonical, sorted by t
+
+    @property
+    def n_stages(self) -> int:
+        return n_model_chunks(self.name, self.pp, self.n_chunks)
+
+    @property
+    def n_ticks(self) -> int:
+        return self.ticks[-1].t + 1 if self.ticks else 0
+
+    def owner(self, stage: int, micro: int) -> Tuple[int, int]:
+        """(rank, local chunk) executing model chunk ``stage`` for ``micro``
+        (direction-dependent under dualpipe)."""
+        if self.name == "dualpipe" and micro >= (self.n_micro + 1) // 2:
+            return self.pp - 1 - stage, 1
+        if self.name == "dualpipe":
+            return stage, 0
+        return stage % self.pp, stage // self.pp
+
+    def rank_ticks(self, rank: int) -> List[TickOp]:
+        return [op for op in self.ticks if op.rank == rank]
+
+    def in_flight_series(self) -> np.ndarray:
+        """(pp, v, T) int: microbatches forwarded-but-not-yet-retired on each
+        (rank, chunk) at every tick — the activation-residency time series.
+        A microbatch occupies its chunk from its forward tick through its
+        backward tick inclusive (the backward recomputes from the stored
+        boundary input, so the input stays resident until then)."""
+        return _in_flight_series(self)
+
+    def peak_in_flight(self) -> np.ndarray:
+        """(pp, v) int: per-chunk peak in-flight microbatches."""
+        return self.in_flight_series().max(axis=2)
+
+    def rank_peak_in_flight(self, rank: int) -> int:
+        """Peak simultaneous in-flight chunk-activations on ``rank``: the
+        max of the summed per-chunk series.  The chunks need not peak at
+        the same tick, so this can be strictly below the sum of per-chunk
+        maxima — do not 'simplify' to ``peak_in_flight()[rank].sum()``."""
+        return int(self.in_flight_series()[rank].sum(axis=0).max())
+
+    def peak_profile(self, rank: int, weights: Optional[Sequence[float]]
+                     = None) -> Tuple[float, Tuple[int, ...]]:
+        """(peak, per-chunk counts at the peak tick) of the weighted
+        in-flight series Σ_c w_c · k_c(t).  ``weights`` defaults to 1 per
+        chunk (chunk-units); pass per-chunk activation bytes to get the
+        byte-exact residency peak the memory model reports."""
+        series = self.in_flight_series()[rank]
+        w = np.ones(self.n_chunks) if weights is None \
+            else np.asarray(list(weights), np.float64)
+        total = (series * w[:, None]).sum(axis=0)
+        t_star = int(total.argmax())
+        return float(total[t_star]), tuple(int(x) for x in series[:, t_star])
+
+    def check(self) -> None:
+        """Raise if the tick stream violates the schedule invariants (every
+        micro forwarded/backwarded exactly once per model chunk, backward
+        after forward, dependencies with 1-tick latency, rank capacity)."""
+        G, M = self.n_stages, self.n_micro
+        f: Dict[Tuple[int, int], TickOp] = {}
+        b: Dict[Tuple[int, int], TickOp] = {}
+        per_tick: Dict[Tuple[int, int, str], int] = {}
+        for op in self.ticks:
+            d = f if op.op == "F" else b
+            key = (op.micro, op.stage)
+            assert key not in d, f"duplicate {op}"
+            d[key] = op
+            k = (op.t, op.rank, op.op)
+            per_tick[k] = per_tick.get(k, 0) + 1
+            assert per_tick[k] == 1, f"rank capacity violated at {op}"
+            r, c = self.owner(op.stage, op.micro)
+            assert (op.rank, op.chunk) == (r, c), f"misplaced {op}"
+        assert len(f) == G * M and len(b) == G * M, \
+            f"expected {G * M} F and B ops, got {len(f)}/{len(b)}"
+        for (m, g), op in f.items():
+            if g > 0:
+                assert f[(m, g - 1)].t < op.t, f"F dep violated at {op}"
+        for (m, g), op in b.items():
+            assert f[(m, g)].t <= op.t, f"B before F at {op}"
+            if g < G - 1:
+                assert b[(m, g + 1)].t < op.t, f"B dep violated at {op}"
+
+
+@functools.lru_cache(maxsize=512)
+def _in_flight_series(sched: "PipelineSchedule") -> np.ndarray:
+    T = sched.n_ticks
+    out = np.zeros((sched.pp, sched.n_chunks, T), np.int64)
+    fwd: Dict[Tuple[int, int], int] = {}
+    for op in sched.ticks:
+        if op.op == "F":
+            fwd[(op.micro, op.stage)] = op.t
+    for op in sched.ticks:
+        if op.op == "B":
+            out[op.rank, op.chunk, fwd[(op.micro, op.stage)]:op.t + 1] += 1
+    out.setflags(write=False)
+    return out
+
+
+@functools.lru_cache(maxsize=512)
+def make_schedule(name: str, pp: int, n_micro: int,
+                  n_chunks: int = 1) -> PipelineSchedule:
+    """Build the canonical tick stream for ``name`` ∈ {1f1b, interleaved,
+    dualpipe}.  ``n_chunks`` is the virtual-stage count per rank (forced to
+    1 for 1f1b and 2 for dualpipe; >= 2 for interleaved)."""
+    v = norm_chunks(name, n_chunks)
+    if pp < 1 or (name != "1f1b" and pp < 2):
+        raise ValueError(f"{name} needs pp >= 2 (got {pp})")
+    if n_micro < 1:
+        raise ValueError("n_micro must be >= 1")
+    placement = schedule_placement(name, pp, v)
+    G = n_model_chunks(name, pp, v)
+    orders = _orders(name, pp, n_micro, v)
+    times = assign_ticks(orders, G, fb_per_tick=False)
+    ticks = []
+    for r, queues in enumerate(orders):
+        for q in queues:
+            for kind, micro, stage in q.ops:
+                ticks.append(TickOp(t=times[(kind, micro, stage)], rank=r,
+                                    op=kind, micro=micro, stage=stage,
+                                    chunk=q.chunk[stage]))
+    ticks.sort(key=lambda op: (op.t, op.rank, op.op))
+    sched = PipelineSchedule(name=name, pp=pp, n_micro=n_micro, n_chunks=v,
+                             placement=placement, ticks=tuple(ticks))
+    return sched
+
+
+def exec_tick_times(sched: PipelineSchedule
+                    ) -> Dict[Tuple[str, int, int], int]:
+    """Executor-timeline tick of every op (one F and one B per rank per
+    tick): the timing ``train.schedules.build_exec_tables`` compiles into
+    the shard_map executor's static tables."""
+    orders = _orders(sched.name, sched.pp, sched.n_micro, sched.n_chunks)
+    return assign_ticks(orders, sched.n_stages, fb_per_tick=True)

@@ -38,9 +38,11 @@ def _sharded(dev: DeviceParams, cfg: ParallelConfig, bytes_per: int) -> int:
 
 
 def zero_memory(spec: ModelSpec, cfg: ParallelConfig,
-                stage: int = None) -> TrainStateBytes:
-    """Per-device bytes of params/grads/optimizer for one PP stage."""
-    dev = device_params(spec, cfg, stage=stage)
+                stage: int = None, layers=None) -> TrainStateBytes:
+    """Per-device bytes of params/grads/optimizer for one PP stage (or, via
+    ``layers``, an explicit layer-id list — the schedule-aware multi-chunk
+    path)."""
+    dev = device_params(spec, cfg, stage=stage, layers=layers)
     dt = cfg.dtype
     full_p = dev.total * dt.weights
     full_g = dev.total * dt.gradient

@@ -13,8 +13,26 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
   PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-v3 --shape train_4k \
       --zero os+g --recompute full --attn chunked --n-micro 16
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1_5b --shape train_4k \
+      --pp 4 --n-micro 8 --schedule dualpipe
 
-Results cache to benchmarks/artifacts/dryrun/<tag>.json; --force recomputes.
+Arguments (see ``main()``): ``--arch``/``--shape`` or ``--all`` select the
+combos; ``--zero``, ``--recompute``, ``--attn``, ``--n-micro``,
+``--capacity-factor``, ``--moe-impl`` configure the lowered program;
+``--mesh-shape``/``--multi-pod`` the fake device grid.  With ``--pp N``
+(> 1) each pipeline rank is compiled as its own program holding the
+schedule's in-flight microbatch counts (``--schedule
+{1f1b,interleaved,dualpipe}``, ``--pp-chunks`` virtual stages per rank)
+next to ``estimate_memory(stage=r, schedule=...)`` — the measurement side
+of ``docs/pipeline-schedules.md``.
+
+Artifacts: one JSON per combo in ``benchmarks/artifacts/dryrun/<tag>.json``
+(tag = arch__shape__mesh[__ppN[__<schedule><v>]][suffix]) with status,
+lower/compile wall-times, ``memory_analysis`` fields, flops/bytes from
+``cost_analysis``, per-collective HLO byte counts (plain runs) or the
+per-rank records (``--pp`` runs: layers, per-chunk in-flight, memory,
+analytic breakdown).  Existing artifacts are reused unless ``--force``;
+``benchmarks/validate_memory.py`` consumes them.
 """
 
 import argparse
@@ -206,39 +224,93 @@ def _stage_input_shardings(mesh, arrs):
     return tuple(out)
 
 
-def _make_stage_probe(spec, opts, pp, stage, in_flight):
-    """Per-stage training-memory probe: forward ``in_flight`` microbatches
-    with live activations (a scan whose backward consumes them last-in) then
-    one accumulated backward + AdamW update — the 1F1B residency of stage
-    ``stage`` as one compilable program.  Last stage reduces via the real CE;
-    interior stages via a mean-square surrogate (same backward structure)."""
-    from repro.models.pipeline import make_stage_fn
-    from repro.optim.adamw import AdamWConfig, adamw_update
-    fwd = make_stage_fn(spec, opts, pp, stage)
-    is_first, is_last = stage == 0, stage == pp - 1
+def _rank_params_slice(params, spec, chunks, firsts, lasts):
+    """Heterogeneous per-rank parameter tree for a multi-chunk rank:
+    {'shared': embed/final_norm/head owned by any of the rank's chunks,
+    'chunks': one layers-only slice per chunk}.  Shared pieces are hoisted
+    so a rank whose chunks own both ends (dualpipe rank 0) holds one copy —
+    matching the stacked runtime layout and the analytic ``device_params``.
+    """
+    from repro.models.pipeline import chunk_params_slice
+    shared = {}
+    if any(firsts) or (spec.tie_embeddings and any(lasts)):
+        shared["embed"] = params["embed"]
+    if any(lasts):
+        shared["final_norm"] = params["final_norm"]
+        if not spec.tie_embeddings and "head" in params:
+            shared["head"] = params["head"]
+    # a list, not a tuple: adamw_update unpacks its per-leaf update triples
+    # with is_leaf=isinstance(x, tuple)
+    return {"shared": shared,
+            "chunks": [chunk_params_slice(params, spec, ls, with_embed=False,
+                                          with_head=False) for ls in chunks]}
 
-    def probe(state, *arrs):
+
+def _make_rank_probe(spec, opts, chunks, firsts, lasts, in_flight):
+    """Per-rank training-memory probe: for each of the rank's layer chunks,
+    forward ``in_flight[c]`` microbatches with live activations (a scan
+    whose backward consumes them last-in), then one accumulated backward +
+    AdamW update — the schedule residency of the rank at its byte-weighted
+    peak tick as one compilable program.  The last model chunk reduces via
+    the real CE; all others via a mean-square surrogate (same backward
+    structure)."""
+    from repro.models.pipeline import make_chunk_fn
+    from repro.optim.adamw import AdamWConfig, adamw_update
+    fns = [make_chunk_fn(spec, opts, ls, is_first=f, is_last=l)
+           for ls, f, l in zip(chunks, firsts, lasts)]
+    total_k = max(sum(in_flight), 1)
+
+    def probe(state, *arrs_flat):
+        arrs_per_chunk, i = [], 0
+        for c in range(len(chunks)):
+            # first chunk: tokens only; interior: boundary x only;
+            # last (and not first): boundary x + tokens for the CE
+            n = 2 if (lasts[c] and not firsts[c]) else 1
+            if in_flight[c] == 0:
+                arrs_per_chunk.append(None)
+                continue
+            arrs_per_chunk.append(arrs_flat[i:i + n])
+            i += n
+
         def scalar(params_):
-            def body(c, inp):
-                if is_first:
-                    x, tk = None, inp[0]
-                elif is_last:
-                    x, tk = inp
-                else:
-                    (x,), tk = inp, None
-                out, aux = fwd(params_, x, tk)
-                if is_last:
-                    targets = tk[:, 1:]
-                    lg = out[:, :-1].astype(jnp.float32)
-                    logz = jax.scipy.special.logsumexp(lg, axis=-1)
-                    gold = jnp.take_along_axis(
-                        lg, targets[..., None], axis=-1)[..., 0]
-                    val = jnp.mean(logz - gold)
-                else:
-                    val = jnp.mean(jnp.square(out.astype(jnp.float32)))
-                return c + val + 0.01 * aux, None
-            tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), arrs)
-            return tot / in_flight
+            tot = jnp.zeros((), jnp.float32)
+            for c, fn in enumerate(fns):
+                if arrs_per_chunk[c] is None:
+                    continue
+                cp = dict(params_["chunks"][c])
+                sh = params_["shared"]
+                if firsts[c] or (spec.tie_embeddings and lasts[c]):
+                    cp["embed"] = sh["embed"]
+                if lasts[c]:
+                    cp["final_norm"] = sh["final_norm"]
+                    if "head" in sh:
+                        cp["head"] = sh["head"]
+                is_first, is_last = firsts[c], lasts[c]
+
+                def body(acc, inp, fn=fn, is_first=is_first, is_last=is_last,
+                         cp=cp):
+                    if is_first:
+                        x, tk = None, inp[0]
+                    elif is_last:
+                        x, tk = inp
+                    else:
+                        (x,), tk = inp, None
+                    out, aux = fn(cp, x, tk)
+                    if is_last:
+                        targets = tk[:, 1:]
+                        lg = out[:, :-1].astype(jnp.float32)
+                        logz = jax.scipy.special.logsumexp(lg, axis=-1)
+                        gold = jnp.take_along_axis(
+                            lg, targets[..., None], axis=-1)[..., 0]
+                        val = jnp.mean(logz - gold)
+                    else:
+                        val = jnp.mean(jnp.square(out.astype(jnp.float32)))
+                    return acc + val + 0.01 * aux, None
+
+                part, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                                       arrs_per_chunk[c])
+                tot = tot + part
+            return tot / total_k
         grads = jax.tree.map(lambda g: g.astype(jnp.float32),
                              jax.grad(scalar)(state.params))
         new_state, _ = adamw_update(state, grads, AdamWConfig())
@@ -249,24 +321,35 @@ def _make_stage_probe(spec, opts, pp, stage, in_flight):
 
 def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
            force: bool = False, tag_suffix: str = "", mesh_shape=None,
+           schedule: str = "1f1b", n_chunks: int = 1,
            **build_kw) -> Dict[str, Any]:
-    """--pp N: lower + compile each pipeline stage as its own program on the
-    stage's (data/pp, model) sub-mesh and record per-stage memory_analysis
-    next to the analytical estimate_memory(stage=s, in_flight=1F1B(s)).
+    """--pp N [--schedule ...]: lower + compile each pipeline rank as its
+    own program on the rank's (data/pp, model) sub-mesh and record per-rank
+    memory_analysis next to the analytical estimate_memory(stage=r,
+    schedule=...).
 
-    This is the heterogeneous view (true stage params: embed on stage 0,
-    head on the last) — no SPMD padding — so the records are directly
-    comparable to the paper's per-stage Tables 4/5 arithmetic."""
-    from repro.core import estimate_memory, one_f1b_in_flight
+    Each rank's probe holds the schedule's in-flight microbatch counts at
+    the rank's byte-weighted peak tick — per chunk under interleaved /
+    dualpipe — so the measured temp bytes carry the same schedule residency
+    the analytic column models.  This is the heterogeneous view (true rank
+    params: embedding with the first model chunk, head with the last, both
+    ends on the boundary ranks under dualpipe) — no SPMD padding — so the
+    records are directly comparable to the paper's per-stage Tables 4/5
+    arithmetic."""
+    from repro.core import estimate_memory, make_schedule
+    from repro.core.activations import (layers_activation_bytes,
+                                        rank_chunk_layers)
     from repro.core.parallel_config import ParallelConfig
-    from repro.models.pipeline import (check_pipeline_supported, partition,
-                                       stage_params_slice)
+    from repro.core.schedules import norm_chunks, n_model_chunks
+    from repro.models.pipeline import check_pipeline_supported
     from repro.optim.adamw import init_train_state
 
     os.makedirs(ART_DIR, exist_ok=True)
     data, model_ax = tuple(mesh_shape) if mesh_shape else (16, 16)
     mesh_tag = ("pod2x" if multi_pod else "pod") + f"{data}x{model_ax}"
-    tag = f"{arch}__{shape_name}__{mesh_tag}__pp{pp}{tag_suffix}"
+    v = norm_chunks(schedule, n_chunks)
+    sched_tag = "" if schedule == "1f1b" else f"__{schedule}{v}"
+    tag = f"{arch}__{shape_name}__{mesh_tag}__pp{pp}{sched_tag}{tag_suffix}"
     path = os.path.join(ART_DIR, tag + ".json")
     if os.path.exists(path) and not force:
         with open(path) as f:
@@ -274,6 +357,7 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
 
     info = SHAPES[shape_name]
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "pp": pp,
+                           "schedule": schedule, "n_chunks": v,
                            "mesh": mesh_tag, "options": build_kw}
     try:
         if info["kind"] != "train":
@@ -302,25 +386,40 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
             zero=ZeROStage(build_kw.get("zero", "os+g")),
             recompute=RecomputePolicy(build_kw.get("recompute", "none")),
             micro_batch=max(b_micro // dp, 1), seq_len=info["seq"])
+        sched = make_schedule(schedule, pp, n_micro, n_chunks=v)
+        all_chunks = rank_chunk_layers(spec, pp, schedule=schedule,
+                                       n_chunks=v)
+        g_total = n_model_chunks(schedule, pp, v)
         stages = []
         with axis_rules(mesh):
-            for s in range(pp):
-                k = one_f1b_in_flight(pp, s, n_micro)
-                abstract_stage = jax.eval_shape(
-                    lambda p: stage_params_slice(p, spec, pp, s), params_abs)
+            for r in range(pp):
+                chunks = all_chunks[r]
+                placed = sched.placement[r]
+                firsts = [g == 0 for g in placed]
+                lasts = [g == g_total - 1 for g in placed]
+                weights = [layers_activation_bytes(spec, cfg, ls)
+                           for ls in chunks]
+                _, ks = sched.peak_profile(r, weights)
+                abstract_rank = jax.eval_shape(
+                    lambda p: _rank_params_slice(p, spec, chunks, firsts,
+                                                 lasts), params_abs)
                 abstract_state = jax.eval_shape(init_train_state,
-                                                abstract_stage)
+                                                abstract_rank)
                 arrs = []
-                if s == 0:
-                    arrs.append(jax.ShapeDtypeStruct(
-                        (k, b_micro, info["seq"]), jnp.int32))
-                else:
-                    arrs.append(jax.ShapeDtypeStruct(
-                        (k, b_micro, info["seq"], spec.h), jnp.bfloat16))
-                    if s == pp - 1:
+                for c, k in enumerate(ks):
+                    if k == 0:
+                        continue
+                    if firsts[c]:
                         arrs.append(jax.ShapeDtypeStruct(
                             (k, b_micro, info["seq"]), jnp.int32))
-                probe = _make_stage_probe(spec, opts, pp, s, k)
+                    else:
+                        arrs.append(jax.ShapeDtypeStruct(
+                            (k, b_micro, info["seq"], spec.h), jnp.bfloat16))
+                        if lasts[c]:
+                            arrs.append(jax.ShapeDtypeStruct(
+                                (k, b_micro, info["seq"]), jnp.int32))
+                probe = _make_rank_probe(spec, opts, chunks, firsts, lasts,
+                                         list(ks))
                 st_sh = state_shardings(abstract_state, mesh, cfg.zero)
                 in_sh = _stage_input_shardings(mesh, arrs)
                 t0 = time.perf_counter()
@@ -330,17 +429,21 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
                 ).lower(abstract_state, *arrs).compile()
                 t_c = time.perf_counter() - t0
                 mem = compiled.memory_analysis()
-                est = estimate_memory(spec, cfg, stage=s,
-                                      in_flight_microbatches=k)
+                est = estimate_memory(spec, cfg, stage=r, schedule=schedule,
+                                      n_chunks=v, n_micro=n_micro)
                 stages.append({
-                    "stage": s, "layers": [int(l) for l in
-                                           partition(spec, pp).stages[s]],
-                    "in_flight": k, "t_compile_s": t_c,
+                    "stage": r,
+                    "layers": [int(l) for ls in chunks for l in ls],
+                    "chunks": [{"model_chunk": int(placed[c]),
+                                "layers": [int(l) for l in chunks[c]],
+                                "in_flight": int(ks[c])}
+                               for c in range(len(chunks))],
+                    "in_flight": int(sum(ks)), "t_compile_s": t_c,
                     "memory": _mem_dict(mem),
                     "analytic": {kk: int(vv)
                                  for kk, vv in est.breakdown().items()},
                 })
-                print(f"[{tag}] stage {s}: in_flight={k} "
+                print(f"[{tag}] rank {r}: in_flight={list(ks)} "
                       f"temp={stages[-1]['memory'].get('temp_size_in_bytes', 0)/2**30:.2f} GiB "
                       f"analytic_act={est.activations/2**30:.2f} GiB")
         temps = [st["memory"].get("temp_size_in_bytes", 0) for st in stages]
@@ -391,6 +494,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             mem = compiled.memory_analysis()
             print(mem)                       # proves it fits / reports bytes
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):   # older jax: list of dicts
+                cost = cost[0] if cost else {}
             print({k: v for k, v in list(cost.items())[:8]})
             hlo = compiled.as_text()
             rec.update(
@@ -432,6 +537,13 @@ def main() -> int:
     ap.add_argument("--pp", type=int, default=1,
                     help="pipeline stages: >1 compiles each stage as its own "
                          "program and records per-stage memory_analysis")
+    ap.add_argument("--schedule", default="1f1b",
+                    choices=["1f1b", "interleaved", "dualpipe"],
+                    help="pipeline schedule for --pp probes: sets per-rank "
+                         "chunk layout and in-flight residency")
+    ap.add_argument("--pp-chunks", type=int, default=None,
+                    help="virtual stages per rank (interleaved: >=2; "
+                         "defaults to 2 for interleaved/dualpipe)")
     ap.add_argument("--capacity-factor", type=float, default=1.25)
     ap.add_argument("--moe-impl", default="scatter",
                     choices=["scatter", "a2a"])
@@ -457,11 +569,14 @@ def main() -> int:
         combos = [(args.arch, args.shape)]
 
     failures = 0
+    n_chunks = args.pp_chunks if args.pp_chunks is not None \
+        else (1 if args.schedule == "1f1b" else 2)
     for a, s in combos:
         if args.pp > 1:
             rec = run_pp(a, s, args.pp, multi_pod=args.multi_pod,
                          force=args.force, tag_suffix=args.tag_suffix,
-                         mesh_shape=mesh_shape, **build_kw)
+                         mesh_shape=mesh_shape, schedule=args.schedule,
+                         n_chunks=n_chunks, **build_kw)
         else:
             rec = run_one(a, s, multi_pod=args.multi_pod, force=args.force,
                           tag_suffix=args.tag_suffix, mesh_shape=mesh_shape,

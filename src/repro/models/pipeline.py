@@ -1,32 +1,42 @@
-"""Pipeline-parallel stage partitioning of a Model.
+"""Pipeline-parallel partitioning of a Model into per-rank layer chunks.
 
-The layer→stage assignment is ``core.params.pp_stage_layers`` — the exact
+The layer→chunk assignment is ``core.params.pp_stage_layers`` — the exact
 split behind the paper's Table 4 — so the runtime executor, the per-stage
 dry-run probes and the analytical model (``estimate_memory(stage=...)``,
-``table4_stages``) can never disagree about which layers live where.
+``table4_stages``) can never disagree about which layers live where.  With a
+pipeline *schedule* (``core.schedules``) a rank may hold several chunks:
+plain ``1f1b`` keeps one contiguous stage per rank, Megatron-style
+``interleaved`` assigns ``v`` virtual stages (rank r holds model chunks
+``{r, pp+r, …}``), and ``dualpipe`` assigns each rank two mirrored stages
+``(r, pp-1-r)`` with every stage *duplicated* across two ranks (DualPipe's
+2× parameter cost).
 
 Two views of the same partition are provided:
 
-* **Heterogeneous stage slices** (``stage_params_slice`` +
-  ``make_stage_fn``): stage s's true parameter subtree (embedding only on
-  stage 0, final norm / head only on the last stage, its own contiguous
-  dense/MoE sub-stacks) and a forward for exactly those layers.  Used by the
-  dry-run to lower/compile each stage as its own program and read XLA's
-  per-stage ``memory_analysis`` — the numbers compared against
-  ``estimate_memory(spec, cfg, stage=s, in_flight_microbatches=...)``.
+* **Heterogeneous chunk slices** (``stage_params_slice`` /
+  ``chunk_params_slice`` + ``make_stage_fn`` / ``make_chunk_fn``): a chunk's
+  true parameter subtree (embedding only with model chunk 0, final norm /
+  head only with the last, its own contiguous dense/MoE sub-stacks) and a
+  forward for exactly those layers.  Used by the dry-run to lower/compile
+  each rank as its own program and read XLA's per-rank ``memory_analysis``
+  — the numbers compared against ``estimate_memory(spec, cfg, stage=r,
+  schedule=...)``.
 
-* **Stage-stacked (SPMD) layout** (``stack_pipeline_params`` /
-  ``unstack_pipeline_grads`` + ``pipeline_stage_apply``): every parameter
-  leaf gains a leading ``pp`` dim sharded over the ``pipe`` mesh axis, with
-  per-stage layer stacks padded to the widest stage (masked identity slots)
-  and a *union* slot structure (a slot carries both the dense-MLP and MoE
-  subtrees when the model mixes kinds; a per-slot flag selects).  This is
-  what the 1F1B executor (``train.pipeline_loop``) runs under ``shard_map``
-  — one program, stage identity = ``lax.axis_index('pipe')``.
+* **Chunk-stacked (SPMD) layout** (``stack_pipeline_params`` /
+  ``unstack_pipeline_grads`` + ``pipeline_stage_apply``): every layer leaf
+  gains leading ``(pp, n_chunks, l_max)`` dims with the ``pp`` dim sharded
+  over the ``pipe`` mesh axis, chunk layer stacks padded to the widest chunk
+  (masked identity slots) and a *union* slot structure (a slot carries both
+  the dense-MLP and MoE subtrees when the model mixes kinds; a per-slot
+  flag selects).  Embedding / final-norm / head keep one row per rank, zero
+  except on ranks whose chunks own them.  This is what the schedule-driven
+  executor (``train.pipeline_loop``) runs under ``shard_map`` — one
+  program, rank identity = ``lax.axis_index('pipe')``, the active chunk per
+  tick read from the schedule's static tables.
 
 The stacked layout trades memory for SPMD uniformity (padded slots, the
-unused half of mixed dense/MoE slots, zero embed rows on interior stages);
-the per-stage dry-run path has no such padding, so memory validation always
+unused half of mixed dense/MoE slots, zero embed rows on interior ranks);
+the per-rank dry-run path has no such padding, so memory validation always
 uses the heterogeneous view.
 """
 
@@ -108,21 +118,94 @@ def partition(spec: ModelSpec, pp: int) -> StagePartition:
                           slot_of=slot_of)
 
 
+@dataclasses.dataclass(frozen=True)
+class ChunkedPartition:
+    """Schedule-aware layer→(rank, chunk) assignment plus the index/mask
+    arrays the chunk-stacked SPMD layout derives from it.  All arrays are
+    numpy (static schedule data).  ``occurrences[l]`` lists every
+    (rank, chunk, slot) holding global layer ``l`` — exactly one entry per
+    layer except under dualpipe, where every layer lives on two ranks."""
+
+    pp: int
+    n_chunks: int                     # v, local chunks per rank
+    n_stages: int                     # model chunks overall (pp*v or pp)
+    n_layers: int
+    n_dense: int
+    schedule: str
+    chunks: Tuple[Tuple[Tuple[int, ...], ...], ...]   # (pp, v) layer tuples
+    placement: Tuple[Tuple[int, ...], ...]            # (pp, v) model chunk id
+    l_max: int                        # widest chunk (slot count per chunk)
+    idx: np.ndarray                   # (pp, v, l_max) global layer id
+    mask: np.ndarray                  # (pp, v, l_max) f32: 1 real, 0 pad
+    moe_flag: np.ndarray              # (pp, v, l_max) f32
+    first_flag: np.ndarray            # (pp, v) f32: chunk is model chunk 0
+    last_flag: np.ndarray             # (pp, v) f32: chunk is the last
+    occurrences: Tuple[Tuple[Tuple[int, int, int], ...], ...]
+
+
+def chunked_partition(spec: ModelSpec, pp: int, *, schedule: str = "1f1b",
+                      n_chunks: int = 1) -> ChunkedPartition:
+    """Partition for a pipeline schedule: model split into
+    ``core.n_model_chunks`` contiguous pieces (same front-loaded Table-4
+    rule as plain PP), placed per ``core.schedule_placement``."""
+    from repro.core.activations import rank_chunk_layers
+    from repro.core.schedules import (norm_chunks, n_model_chunks,
+                                      schedule_placement)
+    check_pipeline_supported(spec)
+    v = norm_chunks(schedule, n_chunks)
+    g = n_model_chunks(schedule, pp, v)
+    if not 1 <= g <= spec.n_layers:
+        raise ValueError(f"{g} model chunks need n_layers >= {g} "
+                         f"(got {spec.n_layers})")
+    chunks = rank_chunk_layers(spec, pp, schedule=schedule, n_chunks=v)
+    placement = schedule_placement(schedule, pp, v)
+    n_dense = spec.n_layers - spec.n_moe_layers()
+    l_max = max(len(ls) for row in chunks for ls in row)
+    idx = np.zeros((pp, v, l_max), np.int32)
+    mask = np.zeros((pp, v, l_max), np.float32)
+    moe_flag = np.zeros((pp, v, l_max), np.float32)
+    first = np.zeros((pp, v), np.float32)
+    last = np.zeros((pp, v), np.float32)
+    occ: Dict[int, list] = {l: [] for l in range(spec.n_layers)}
+    for r in range(pp):
+        for c in range(v):
+            ls = chunks[r][c]
+            first[r, c] = float(placement[r][c] == 0)
+            last[r, c] = float(placement[r][c] == g - 1)
+            for j in range(l_max):
+                l = ls[j] if j < len(ls) else ls[-1]  # pads repeat a layer
+                idx[r, c, j] = l
+                if j < len(ls):
+                    mask[r, c, j] = 1.0
+                    moe_flag[r, c, j] = float(l >= n_dense)
+                    occ[l].append((r, c, j))
+    return ChunkedPartition(
+        pp=pp, n_chunks=v, n_stages=g, n_layers=spec.n_layers,
+        n_dense=n_dense, schedule=schedule, chunks=chunks,
+        placement=placement, l_max=l_max, idx=idx, mask=mask,
+        moe_flag=moe_flag, first_flag=first, last_flag=last,
+        occurrences=tuple(tuple(occ[l]) for l in range(spec.n_layers)))
+
+
 # ---------------------------------------------------------------------------
 # Heterogeneous view: true per-stage parameter subtrees + per-stage forward
 # ---------------------------------------------------------------------------
 
-def stage_params_slice(params: PyTree, spec: ModelSpec, pp: int,
-                       stage: int) -> PyTree:
-    """Stage ``stage``'s parameters in the Model layout (keys kept so the
-    §3 TP/ZeRO sharding rules in ``parallel.sharding`` apply unchanged)."""
+def chunk_params_slice(params: PyTree, spec: ModelSpec,
+                       layers: Tuple[int, ...], *, with_embed: bool,
+                       with_head: bool) -> PyTree:
+    """One contiguous layer chunk's parameters in the Model layout (keys
+    kept so the §3 TP/ZeRO sharding rules in ``parallel.sharding`` apply
+    unchanged).  ``with_embed``/``with_head`` attach the embedding / final
+    norm + output head — owned by the first / last *model* chunk, which
+    under multi-chunk schedules is a property of the chunk, not the rank."""
     check_pipeline_supported(spec)
-    part = partition(spec, pp)
-    layers = part.stages[stage]
     lo, hi = layers[0], layers[-1] + 1
-    nd = part.n_dense
+    if list(layers) != list(range(lo, hi)):
+        raise ValueError(f"chunk layers must be contiguous, got {layers}")
+    nd = spec.n_layers - spec.n_moe_layers()
     out: Dict[str, Any] = {}
-    if stage == 0:
+    if with_embed:
         out["embed"] = params["embed"]
     d_lo, d_hi = lo, min(hi, nd)
     if d_hi > d_lo:
@@ -132,7 +215,7 @@ def stage_params_slice(params: PyTree, spec: ModelSpec, pp: int,
     if m_hi > max(m_lo, 0):
         out["moe_layers"] = jax.tree.map(lambda a: a[m_lo:m_hi],
                                          params["moe_layers"])
-    if stage == pp - 1:
+    if with_head:
         out["final_norm"] = params["final_norm"]
         if spec.tie_embeddings:
             out["embed"] = params["embed"]
@@ -141,50 +224,68 @@ def stage_params_slice(params: PyTree, spec: ModelSpec, pp: int,
     return out
 
 
-def make_stage_fn(spec: ModelSpec, opts: ModelOptions, pp: int, stage: int):
-    """fn(stage_params, x, tokens) -> (out, aux).
+def stage_params_slice(params: PyTree, spec: ModelSpec, pp: int,
+                       stage: int) -> PyTree:
+    """Plain-1F1B view: stage ``stage``'s parameters (embedding on stage 0,
+    final norm / head on the last stage)."""
+    part = partition(spec, pp)
+    return chunk_params_slice(params, spec, part.stages[stage],
+                              with_embed=stage == 0, with_head=stage == pp - 1)
 
-    Stage 0 embeds ``tokens`` (``x`` is ignored); interior stages transform
-    the boundary activation ``x``; the last stage returns vocab logits
-    (callers compute the loss — the executor and the dry-run probes need
-    different reductions).  With pp=1 this is exactly ``Model.forward`` for
-    the supported families.
+
+def make_chunk_fn(spec: ModelSpec, opts: ModelOptions,
+                  layers: Tuple[int, ...], *, is_first: bool, is_last: bool):
+    """fn(chunk_params, x, tokens) -> (out, aux) for one contiguous layer
+    chunk.
+
+    The first model chunk embeds ``tokens`` (``x`` is ignored); interior
+    chunks transform the boundary activation ``x``; the last chunk returns
+    vocab logits (callers compute the loss — the executor and the dry-run
+    probes need different reductions).  Composing every chunk in model
+    order is exactly ``Model.forward`` for the supported families.
     """
     check_pipeline_supported(spec)
-    part = partition(spec, pp)
+    nd = spec.n_layers - spec.n_moe_layers()
     gemma = spec.name.startswith("gemma")
-    is_first, is_last = stage == 0, stage == pp - 1
     window = spec.sliding_window
 
-    def fn(stage_params: PyTree, x: Optional[jnp.ndarray],
+    def fn(chunk_params: PyTree, x: Optional[jnp.ndarray],
            tokens: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
         if is_first:
-            x = embed_apply(stage_params["embed"], tokens,
+            x = embed_apply(chunk_params["embed"], tokens,
                             scale_by_dim=gemma, h=spec.h)
         b, s = x.shape[0], x.shape[1]
         x = logical_constraint(x, ("batch", "seq", "embed"))
         positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
         aux = jnp.zeros((), jnp.float32)
-        if "dense_layers" in stage_params:
-            x, a = stack_apply(stage_params["dense_layers"], spec, opts, x,
+        if "dense_layers" in chunk_params:
+            x, a = stack_apply(chunk_params["dense_layers"], spec, opts, x,
                                positions, False, window=window)
             aux = aux + a
-        if "moe_layers" in stage_params:
-            x, a = stack_apply(stage_params["moe_layers"], spec, opts, x,
+        if "moe_layers" in chunk_params:
+            x, a = stack_apply(chunk_params["moe_layers"], spec, opts, x,
                                positions, True, window=window)
             aux = aux + a
         if is_last:
-            x = rmsnorm(stage_params["final_norm"], x, spec.norm_eps,
+            x = rmsnorm(chunk_params["final_norm"], x, spec.norm_eps,
                         gemma_style=gemma)
             if spec.tie_embeddings:
-                logits = x @ stage_params["embed"]["w"].T
+                logits = x @ chunk_params["embed"]["w"].T
             else:
-                logits = x @ stage_params["head"]["w"]
+                logits = x @ chunk_params["head"]["w"]
             logits = logical_constraint(logits, ("batch", "seq", "vocab"))
             return logits, aux
         return x, aux
 
     return fn
+
+
+def make_stage_fn(spec: ModelSpec, opts: ModelOptions, pp: int, stage: int):
+    """Plain-1F1B view of :func:`make_chunk_fn`: the forward of Table-4
+    stage ``stage``.  With pp=1 this is exactly ``Model.forward``."""
+    part = partition(spec, pp)
+    return make_chunk_fn(spec, opts, part.stages[stage],
+                         is_first=stage == 0, is_last=stage == pp - 1)
 
 
 # ---------------------------------------------------------------------------
@@ -196,17 +297,20 @@ def _take_layers(leaf: jnp.ndarray, index: np.ndarray) -> jnp.ndarray:
     return flat.reshape(index.shape + leaf.shape[1:])
 
 
-def stack_pipeline_params(params: PyTree, spec: ModelSpec, pp: int) -> PyTree:
-    """Model params → stage-stacked layout.
+def stack_pipeline_params(params: PyTree, spec: ModelSpec, pp: int, *,
+                          schedule: str = "1f1b",
+                          n_chunks: int = 1) -> PyTree:
+    """Model params → chunk-stacked layout for the schedule.
 
-    layers: union slot structure, leaves (pp, l_max, ...); pad slots repeat a
-    real layer of the stage (masked to identity at apply time) and the unused
-    kind of a mixed dense/MoE slot holds a clipped-gather copy (never selected,
-    so it receives exactly zero gradient).  embed/final_norm/head: (pp, ...)
-    rows, zero except on the stage that owns them.
+    layers: union slot structure, leaves (pp, n_chunks, l_max, ...); pad
+    slots repeat a real layer of the chunk (masked to identity at apply
+    time) and the unused kind of a mixed dense/MoE slot holds a
+    clipped-gather copy (never selected, so it receives exactly zero
+    gradient).  embed/final_norm/head: (pp, ...) rows, zero except on ranks
+    whose chunks own them (under dualpipe rank 0 and rank pp-1 each own an
+    embedding *and* a head copy).
     """
-    check_pipeline_supported(spec)
-    part = partition(spec, pp)
+    part = chunked_partition(spec, pp, schedule=schedule, n_chunks=n_chunks)
     nd = part.n_dense
     dense = params.get("dense_layers") or {}
     moe = params.get("moe_layers") or {}
@@ -226,34 +330,49 @@ def stack_pipeline_params(params: PyTree, spec: ModelSpec, pp: int) -> PyTree:
         if k not in dense:
             layers[k] = jax.tree.map(lambda a: _take_layers(a, idx_m), moe[k])
 
+    has_first = part.first_flag.max(axis=1) > 0        # (pp,) rank owns chunk 0
+    has_last = part.last_flag.max(axis=1) > 0
     emb = params["embed"]["w"]
-    emb_st = jnp.zeros((pp,) + emb.shape, emb.dtype).at[0].set(emb)
-    if spec.tie_embeddings:
-        emb_st = emb_st.at[pp - 1].set(emb)
+    emb_st = jnp.zeros((pp,) + emb.shape, emb.dtype)
     fin = params["final_norm"]["scale"]
-    fin_st = jnp.zeros((pp,) + fin.shape, fin.dtype).at[pp - 1].set(fin)
+    fin_st = jnp.zeros((pp,) + fin.shape, fin.dtype)
+    hd = params.get("head", {}).get("w")
+    hd_st = jnp.zeros((pp,) + hd.shape, hd.dtype) if hd is not None else None
+    for r in range(pp):
+        if has_first[r] or (spec.tie_embeddings and has_last[r]):
+            emb_st = emb_st.at[r].set(emb)
+        if has_last[r]:
+            fin_st = fin_st.at[r].set(fin)
+            if hd_st is not None:
+                hd_st = hd_st.at[r].set(hd)
     out: Dict[str, Any] = {"layers": layers,
                            "embed": {"w": emb_st},
                            "final_norm": {"scale": fin_st}}
-    if "head" in params:
-        hd = params["head"]["w"]
-        out["head"] = {"w": jnp.zeros((pp,) + hd.shape, hd.dtype)
-                       .at[pp - 1].set(hd)}
+    if hd_st is not None:
+        out["head"] = {"w": hd_st}
     return out
 
 
 def unstack_pipeline_grads(gstack: PyTree, params: PyTree, spec: ModelSpec,
-                           pp: int) -> PyTree:
-    """Stage-stacked gradient pytree → the Model parameter layout (each global
-    layer appears in exactly one (stage, slot); embed sums its stage-0 and —
-    when tied — last-stage rows)."""
-    part = partition(spec, pp)
+                           pp: int, *, schedule: str = "1f1b",
+                           n_chunks: int = 1) -> PyTree:
+    """Chunk-stacked gradient pytree → the Model parameter layout.
+
+    Every global layer's gradient is summed over its (rank, chunk, slot)
+    occurrences — one under 1f1b/interleaved, two under dualpipe (both
+    parameter copies saw different microbatches).  embed/final_norm/head
+    rows are summed across ranks (rows on non-owning ranks are exactly
+    zero: their outputs are never selected, so no gradient flows there)."""
+    part = chunked_partition(spec, pp, schedule=schedule, n_chunks=n_chunks)
     nd = part.n_dense
-    sof = jnp.asarray(part.stage_of)
-    slf = jnp.asarray(part.slot_of)
+    occ = part.occurrences
+    r_idx = np.asarray([[o[0] for o in occ[l]] for l in range(part.n_layers)])
+    c_idx = np.asarray([[o[1] for o in occ[l]] for l in range(part.n_layers)])
+    s_idx = np.asarray([[o[2] for o in occ[l]] for l in range(part.n_layers)])
 
     def gather(leaf: jnp.ndarray) -> jnp.ndarray:
-        return leaf[sof, slf]                      # (n_layers, ...)
+        # (n_layers, n_occurrences, ...) summed over occurrences
+        return leaf[r_idx, c_idx, s_idx].sum(axis=1)
 
     dense = params.get("dense_layers") or {}
     moe = params.get("moe_layers") or {}
@@ -264,13 +383,10 @@ def unstack_pipeline_grads(gstack: PyTree, params: PyTree, spec: ModelSpec,
     for k in moe:
         out["moe_layers"][k] = jax.tree.map(
             lambda a: gather(a)[nd:], gstack["layers"][k])
-    g_emb = gstack["embed"]["w"][0]
-    if spec.tie_embeddings and pp > 1:
-        g_emb = g_emb + gstack["embed"]["w"][pp - 1]
-    out["embed"] = {"w": g_emb}
-    out["final_norm"] = {"scale": gstack["final_norm"]["scale"][pp - 1]}
+    out["embed"] = {"w": gstack["embed"]["w"].sum(axis=0)}
+    out["final_norm"] = {"scale": gstack["final_norm"]["scale"].sum(axis=0)}
     if "head" in params:
-        out["head"] = {"w": gstack["head"]["w"][pp - 1]}
+        out["head"] = {"w": gstack["head"]["w"].sum(axis=0)}
     return out
 
 

@@ -1,38 +1,51 @@
-"""Pipeline-parallel train step: GPipe fill + 1F1B steady state over the
-``pipe`` mesh axis.
+"""Pipeline-parallel train step driven by a pluggable schedule.
 
-One SPMD program (``shard_map``): every device holds one stage's slice of the
-stage-stacked parameters (``models.pipeline.stack_pipeline_params``) and runs
-the same tick loop; stage identity is ``lax.axis_index('pipe')``.  A tick t
-pairs one (masked) forward with one (masked) backward:
+``make_pipeline_train_step(model, cfg, mesh, schedule=..., n_chunks=...)``
+builds one jit-able step that runs any of the three schedules in
+``train.schedules`` / ``core.schedules`` — plain ``1f1b`` (the default,
+PR 1's GPipe-fill + 1F1B steady state), Megatron-style ``interleaved``
+virtual stages, or the ``dualpipe`` bidirectional schedule — over the
+``pipe`` mesh axis.  Arguments:
 
-  forward  of microbatch  m_f = t - d             on stage d,
-  backward of microbatch  m_b = t - 2(pp-1) + d   on stage d,
+* ``model``: a ``models.build_model`` Model (decoder-only dense/MoE
+  families; see ``models.pipeline.check_pipeline_supported``),
+* ``cfg``: ``TrainConfig`` — ``cfg.n_micro`` microbatches per step
+  (``interleaved`` requires ``n_micro % pp == 0``),
+* ``mesh``: axes ``('pipe',)`` or ``('pipe', 'data')``
+  (``launch.mesh.make_production_mesh(pp=...)``); pp = mesh.shape['pipe'],
+* ``schedule``/``n_chunks``: schedule name and virtual stages per rank.
 
-so microbatches fill the pipeline GPipe-style (stage d idles until t = d),
-the last stage runs its first backward in the same tick as its first forward
-(the 1F1B hand-off), and upstream stages drain afterwards.  Boundary
-activations travel downstream and activation-gradients upstream via one
-``lax.ppermute`` each per tick.  Total ticks T = n_micro + 2(pp-1).
+One SPMD program (``shard_map``): every device holds one rank's slice of
+the chunk-stacked parameters (``models.pipeline.stack_pipeline_params``,
+leaves ``(pp, n_chunks, l_max, ...)``) and runs the same tick loop; rank
+identity is ``lax.axis_index('pipe')``.  What happens at tick t — forward
+or backward of which microbatch on which local chunk, and where boundary
+tensors travel — is read from the schedule's static tables
+(``train.schedules.build_exec_tables``), which re-time the canonical tick
+stream under the executor's one-(masked)-forward + one-(masked)-backward
+per tick capacity.  Boundary activations and activation-gradients move via
+``lax.ppermute`` down-ring and (for dualpipe's reverse direction and
+interleaved's virtual-stage wraparound) up-ring, landing in per-chunk slot
+rings whose statically-coloured size is the executor's true in-flight bound
+— the quantity ``core.schedule_in_flight`` models analytically.
 
-Backward is *manual* (the tick loop is not differentiated): each stage keeps
-a ring of its in-flight boundary inputs, recomputes its forward for the
-microbatch being retired, and pulls gradients through ``jax.vjp`` with the
-downstream cotangent — stage-granular recompute, the standard JAX pipeline
-construction.  In-flight boundary inputs per stage are bounded by
-min(n_micro, 2·pp-1) and decrease toward the last stage; the analytical
-model's canonical 1F1B counts (``core.one_f1b_in_flight``: pp - stage) share
-the same monotone shape, which is what the per-stage memory validation
-checks.
+Backward is *manual* (the tick loop is not differentiated): each rank keeps
+its in-flight boundary inputs, recomputes the retiring chunk's forward, and
+pulls gradients through ``jax.vjp`` with the downstream cotangent —
+chunk-granular recompute, the standard JAX pipeline construction.  Under
+``dualpipe`` every model chunk lives on two ranks (the schedule's 2×
+parameter cost); ``unstack_pipeline_grads`` sums both copies' gradients.
 
 Semantics match ``train.loop.make_train_step``: fp32 gradient accumulation
 across microbatches, mean over n_micro, one AdamW update, loss metric
 ce + 0.01·aux per microbatch.  ``TrainState`` keeps the pp=1 layout — grads
 are unstacked back before the update — so optimizer, checkpointing and the
-pp=1 path are untouched.
+pp=1 path are untouched.  All three schedules reproduce the pp=1 step's
+loss and post-update params to bf16-accumulation tolerance
+(``tests/test_pipeline_1f1b.py``).
 
-Scope: mesh axes ('pipe',) or ('pipe', 'data'); TP inside a stage is not
-executed here (the per-stage dry-run programs cover TP via GSPMD).  MoE aux
+Scope: mesh axes ('pipe',) or ('pipe', 'data'); TP inside a rank is not
+executed here (the per-rank dry-run programs cover TP via GSPMD).  MoE aux
 uses the scatter dispatch and is pmean'd across data shards.
 """
 
@@ -46,14 +59,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models.layers import embed_apply, rmsnorm
 from repro.models.model import Model
-from repro.models.pipeline import (check_pipeline_supported, partition,
-                                   pipeline_stage_apply,
+from repro.models.pipeline import (check_pipeline_supported,
+                                   chunked_partition, pipeline_stage_apply,
                                    stack_pipeline_params,
                                    unstack_pipeline_grads)
 from repro.optim.adamw import TrainState, adamw_update
 from repro.parallel.compat import shard_map
 from repro.parallel.sharding import pipeline_stage_specs
 from repro.train.loop import TrainConfig, _split_micro
+from repro.train.schedules import build_exec_tables, make_schedule
 
 PyTree = Any
 
@@ -77,9 +91,15 @@ def _ce_sum(logits: jnp.ndarray, tokens: jnp.ndarray,
     return jnp.sum((logz - gold) * _ce_mask(mask, tokens))
 
 
-def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh):
-    """Build the jit-able 1F1B step for ``mesh`` (axes ('pipe'[, 'data']));
-    pp = mesh.shape['pipe'].  Same contract as ``make_train_step``."""
+def _dyn(a: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+
+
+def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
+                             schedule: str = "1f1b", n_chunks: int = 1):
+    """Build the jit-able schedule-driven pipeline step for ``mesh`` (axes
+    ('pipe'[, 'data'])); pp = mesh.shape['pipe'].  Same contract as
+    ``make_train_step``."""
     spec, opts = model.spec, model.opts
     check_pipeline_supported(spec)
     if "pipe" not in mesh.axis_names:
@@ -87,45 +107,65 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh):
                          "(launch.mesh.make_production_mesh(pp=...))")
     if mesh.shape.get("model", 1) != 1:
         raise NotImplementedError(
-            "1F1B executor runs TP=1 inside stages; per-stage TP memory is "
+            "pipeline executor runs TP=1 inside ranks; per-rank TP memory is "
             "covered by the dry-run's stage programs")
     S = mesh.shape["pipe"]
-    part = partition(spec, S)
-    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     M = cfg.n_micro
-    T = M + 2 * (S - 1)
-    B = min(M, 2 * S - 1)                 # boundary-input ring (in-flight cap)
+    sched = make_schedule(schedule, S, M, n_chunks=n_chunks)
+    tab = build_exec_tables(sched)
+    part = chunked_partition(spec, S, schedule=schedule,
+                             n_chunks=sched.n_chunks)
+    V, T, XS, GS = sched.n_chunks, tab.T, tab.x_slots, tab.g_slots
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     gemma = spec.name.startswith("gemma")
-    masks_all = jnp.asarray(part.mask)
+    masks_all = jnp.asarray(part.mask)              # (S, V, l_max)
     flags_all = jnp.asarray(part.moe_flag)
+    first_all = jnp.asarray(part.first_flag)        # (S, V)
+    last_all = jnp.asarray(part.last_flag)
+    tabs = {k: jnp.asarray(getattr(tab, k)) for k in (
+        "f_act", "f_micro", "f_chunk", "f_xidx",
+        "b_act", "b_micro", "b_chunk", "b_xidx", "b_gidx",
+        "rfd_act", "rfd_idx", "rfu_act", "rfu_idx",
+        "rgd_act", "rgd_idx", "rgu_act", "rgu_idx")}
+    # gate every permute on its own table: 1f1b/interleaved move forwards
+    # down-ring and gradients up-ring only — permuting the unused payload
+    # would double boundary traffic per tick
+    use_f_down = bool(tab.fsend_down.any())
+    use_f_up = bool(tab.fsend_up.any())
+    use_b_down = bool(tab.bsend_down.any())
+    use_b_up = bool(tab.bsend_up.any())
 
     def _psum(x, axes):
         return jax.lax.psum(x, axes) if axes else x
 
     def _run(stacked: PyTree, slot_masks: jnp.ndarray,
-             slot_flags: jnp.ndarray, toks: jnp.ndarray,
+             slot_flags: jnp.ndarray, firsts: jnp.ndarray,
+             lasts: jnp.ndarray, toks: jnp.ndarray,
              mmask: Optional[jnp.ndarray]):
-        """shard_map body: returns (stage-stacked fp32 grads, loss_sum)."""
+        """shard_map body: returns (chunk-stacked fp32 grads, loss_sum)."""
         d = jax.lax.axis_index("pipe")
-        is_first, is_last = d == 0, d == S - 1
         p = jax.tree.map(lambda a: jnp.squeeze(a, 0), stacked)
-        slot_mask, slot_flag = slot_masks[0], slot_flags[0]  # local stage row
+        smask, sflag = slot_masks[0], slot_flags[0]     # (V, l_max) local
+        first_l, last_l = firsts[0], lasts[0]           # (V,) local
         _, b_loc, s = toks.shape
         h = spec.h
         adt = p["embed"]["w"].dtype
+        p_layers = p["layers"]
+        p_shared = {k: v for k, v in p.items() if k != "layers"}
 
-        def stage_fn(p_, x_recv, tok, mm):
-            """Uniform per-stage program: embed (selected on stage 0), this
-            stage's union slots, head + local CE sum (meaningful on the last
-            stage, zero-cotangent elsewhere)."""
-            x0 = embed_apply(p_["embed"], tok, scale_by_dim=gemma, h=spec.h)
-            x = jnp.where(is_first, x0, x_recv)
+        def chunk_fn(pl, ps, x_recv, tok, mm, c):
+            """Uniform per-chunk program: embed (selected when the chunk is
+            the first model chunk), the chunk's union slots, head + local CE
+            sum (meaningful on the last model chunk, zero-cotangent
+            elsewhere)."""
+            x0 = embed_apply(ps["embed"], tok, scale_by_dim=gemma, h=spec.h)
+            x = jnp.where(first_l[c] > 0.5, x0, x_recv)
             positions = jnp.broadcast_to(jnp.arange(s)[None], (b_loc, s))
-            y, aux = pipeline_stage_apply(p_["layers"], spec, opts, x,
-                                          positions, slot_mask, slot_flag)
-            z = rmsnorm(p_["final_norm"], y, spec.norm_eps, gemma_style=gemma)
-            w_out = p_["embed"]["w"].T if spec.tie_embeddings \
-                else p_["head"]["w"]
+            y, aux = pipeline_stage_apply(pl, spec, opts, x, positions,
+                                          smask[c], sflag[c])
+            z = rmsnorm(ps["final_norm"], y, spec.norm_eps, gemma_style=gemma)
+            w_out = ps["embed"]["w"].T if spec.tie_embeddings \
+                else ps["head"]["w"]
             logits = z @ w_out
             return y, _ce_sum(logits, tok, mm), aux
 
@@ -135,64 +175,92 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh):
         def count_g(tok, mm):
             return _psum(jnp.sum(_ce_mask(mm, tok)), data_axes)
 
-        def tick(carry, t):
-            x_recv, dy, saved, g, loss, aux_acc = carry
+        def layers_at(c):
+            return jax.tree.map(lambda a: _dyn(a, c), p_layers)
 
-            # -- forward: microbatch m_f enters/advances ------------------
-            m_f = t - d
-            act_f = (m_f >= 0) & (m_f < M)
-            mf = jnp.clip(m_f, 0, M - 1)
-            tok_f = micro_at(toks, mf)
-            mm_f = None if mmask is None else micro_at(mmask, mf)
-            y, ce_sum, aux_f = stage_fn(p, x_recv, tok_f, mm_f)
+        def tick(carry, t):
+            xbuf, gbuf, gl, gsh, loss, aux_acc = carry
+
+            # -- forward: the schedule's (micro, chunk) for this tick ------
+            fa = tabs["f_act"][t, d]
+            fm = tabs["f_micro"][t, d]
+            fc = tabs["f_chunk"][t, d]
+            x_in = _dyn(xbuf, tabs["f_xidx"][t, d])
+            tok_f = micro_at(toks, fm)
+            mm_f = None if mmask is None else micro_at(mmask, fm)
+            y, ce_sum, aux_f = chunk_fn(layers_at(fc), p_shared, x_in,
+                                        tok_f, mm_f, fc)
             ce_m = _psum(ce_sum, data_axes) / jnp.maximum(
                 count_g(tok_f, mm_f), 1.0)
-            fmask = act_f.astype(jnp.float32)
-            loss = loss + fmask * jnp.where(is_last, ce_m, 0.0)
-            aux_acc = aux_acc + fmask * aux_f
-            saved = jnp.where(
-                act_f,
-                jax.lax.dynamic_update_index_in_dim(saved, x_recv, mf % B, 0),
-                saved)
+            loss = loss + fa * last_l[fc] * ce_m
+            aux_acc = aux_acc + fa * aux_f
 
-            # -- backward: microbatch m_b retires (stage-recompute vjp) ---
-            m_b = t - 2 * (S - 1) + d
-            act_b = (m_b >= 0) & (m_b < M)
-            mb = jnp.clip(m_b, 0, M - 1)
-            tok_b = micro_at(toks, mb)
-            mm_b = None if mmask is None else micro_at(mmask, mb)
-            x_saved = micro_at(saved, mb % B)
-            _, vjp_fn = jax.vjp(lambda p_, x_: stage_fn(p_, x_, tok_b, mm_b),
-                                p, x_saved)
-            bmask = act_b.astype(jnp.float32)
-            dy_cot = jnp.where(act_b & (~is_last), dy,
+            # -- backward: retire (micro, chunk) via chunk-recompute vjp ---
+            ba = tabs["b_act"][t, d]
+            bm = tabs["b_micro"][t, d]
+            bc = tabs["b_chunk"][t, d]
+            tok_b = micro_at(toks, bm)
+            mm_b = None if mmask is None else micro_at(mmask, bm)
+            x_sv = _dyn(xbuf, tabs["b_xidx"][t, d])
+            dy = _dyn(gbuf, tabs["b_gidx"][t, d])
+            pl_b = layers_at(bc)
+            _, vjp_fn = jax.vjp(
+                lambda pl_, ps_, x_: chunk_fn(pl_, ps_, x_, tok_b, mm_b, bc),
+                pl_b, p_shared, x_sv)
+            lastb = last_l[bc]
+            dy_cot = jnp.where((ba > 0.5) & (lastb < 0.5), dy,
                                jnp.zeros((), dy.dtype))
-            dce = bmask * jnp.where(is_last, 1.0, 0.0) / jnp.maximum(
-                count_g(tok_b, mm_b), 1.0)
+            dce = ba * lastb / jnp.maximum(count_g(tok_b, mm_b), 1.0)
             # aux is a per-data-shard token mean; the loss term is its pmean,
             # so each shard's cotangent carries 1/data_size (the grads are
             # psummed over the data axes below)
-            daux = 0.01 * bmask / data_size
-            dp, dx = vjp_fn((dy_cot, dce, daux))
-            g = jax.tree.map(lambda acc, gg: acc + gg.astype(jnp.float32),
-                             g, dp)
+            daux = 0.01 * ba / data_size
+            dpl, dps, dx = vjp_fn((dy_cot, dce, daux))
+            cur = jax.tree.map(lambda a: _dyn(a, bc), gl)
+            upd = jax.tree.map(lambda a, g_: a + g_.astype(jnp.float32),
+                               cur, dpl)
+            gl = jax.tree.map(
+                lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, bc, 0),
+                gl, upd)
+            gsh = jax.tree.map(lambda a, g_: a + g_.astype(jnp.float32),
+                               gsh, dps)
 
-            # -- boundary exchange ---------------------------------------
-            x_next = jax.lax.ppermute(y, "pipe",
-                                      [(i, i + 1) for i in range(S - 1)])
-            dy_next = jax.lax.ppermute(dx, "pipe",
-                                       [(i, i - 1) for i in range(1, S)])
-            return (x_next, dy_next, saved, g, loss, aux_acc), None
+            # -- boundary exchange (down-ring; up-ring when the schedule
+            #    routes the reverse direction or a virtual-stage wrap) -----
+            def write(buf, act, idx, payload):
+                i = idx[t, d]
+                cur_v = _dyn(buf, i)
+                val = jnp.where(act[t, d] > 0.5, payload, cur_v)
+                return jax.lax.dynamic_update_index_in_dim(buf, val, i, 0)
 
-        init = (jnp.zeros((b_loc, s, h), adt),
-                jnp.zeros((b_loc, s, h), adt),
-                jnp.zeros((B, b_loc, s, h), adt),
-                jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), p),
+            ring_dn = [(i, (i + 1) % S) for i in range(S)]
+            ring_up = [(i, (i - 1) % S) for i in range(S)]
+            if use_f_down:
+                y_dn = jax.lax.ppermute(y, "pipe", ring_dn)
+                xbuf = write(xbuf, tabs["rfd_act"], tabs["rfd_idx"], y_dn)
+            if use_b_down:
+                dx_dn = jax.lax.ppermute(dx, "pipe", ring_dn)
+                gbuf = write(gbuf, tabs["rgd_act"], tabs["rgd_idx"], dx_dn)
+            if use_f_up:
+                y_up = jax.lax.ppermute(y, "pipe", ring_up)
+                xbuf = write(xbuf, tabs["rfu_act"], tabs["rfu_idx"], y_up)
+            if use_b_up:
+                dx_up = jax.lax.ppermute(dx, "pipe", ring_up)
+                gbuf = write(gbuf, tabs["rgu_act"], tabs["rgu_idx"], dx_up)
+            return (xbuf, gbuf, gl, gsh, loss, aux_acc), None
+
+        init = (jnp.zeros((V * XS, b_loc, s, h), adt),
+                jnp.zeros((V * GS, b_loc, s, h), adt),
+                jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                             p_layers),
+                jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
+                             p_shared),
                 jnp.zeros((), jnp.float32),
                 jnp.zeros((), jnp.float32))
-        (_, _, _, g, loss, aux_acc), _ = jax.lax.scan(
+        (_, _, gl, gsh, loss, aux_acc), _ = jax.lax.scan(
             tick, init, jnp.arange(T))
 
+        g = dict(gsh, layers=gl)
         g = jax.tree.map(lambda a: _psum(a, data_axes)[None], g)
         aux_acc = jax.lax.pmean(aux_acc, data_axes) if data_axes else aux_acc
         loss_sum = jax.lax.psum(loss + 0.01 * aux_acc, "pipe")
@@ -210,7 +278,8 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh):
             raise ValueError(
                 f"micro-batch size {toks.shape[1]} must divide the data axes "
                 f"(size {data_size})")
-        stacked = stack_pipeline_params(state.params, spec, S)
+        stacked = stack_pipeline_params(state.params, spec, S,
+                                        schedule=schedule, n_chunks=V)
         stage_specs = pipeline_stage_specs(stacked, mesh)
         dspec = tuple(data_axes) if data_axes else None
         margs = (toks,)
@@ -219,17 +288,19 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh):
             margs += (micro["mask"],)
             mspecs += (P(None, dspec, *(None,) * (micro["mask"].ndim - 2)),)
 
-        def inner(stacked_l, masks_l, flags_l, toks_l, *rest):
-            return _run(stacked_l, masks_l, flags_l, toks_l,
-                        rest[0] if rest else None)
+        def inner(stacked_l, masks_l, flags_l, firsts_l, lasts_l, toks_l,
+                  *rest):
+            return _run(stacked_l, masks_l, flags_l, firsts_l, lasts_l,
+                        toks_l, rest[0] if rest else None)
 
         g_st, loss_sum = shard_map(
             inner, mesh=mesh,
-            in_specs=(stage_specs, P("pipe", None), P("pipe", None))
-            + mspecs,
+            in_specs=(stage_specs, P("pipe", None, None), P("pipe", None, None),
+                      P("pipe", None), P("pipe", None)) + mspecs,
             out_specs=(stage_specs, P()),
-        )(stacked, masks_all, flags_all, *margs)
-        grads = unstack_pipeline_grads(g_st, state.params, spec, S)
+        )(stacked, masks_all, flags_all, first_all, last_all, *margs)
+        grads = unstack_pipeline_grads(g_st, state.params, spec, S,
+                                       schedule=schedule, n_chunks=V)
         grads = jax.tree.map(lambda a: a / M, grads)
         new_state, opt_metrics = adamw_update(state, grads, cfg.adamw)
         metrics = {"loss": loss_sum / M, **opt_metrics}

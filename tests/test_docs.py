@@ -1,0 +1,96 @@
+"""Docs health (the CI docs job): every intra-repo markdown link in
+README.md / docs/*.md resolves to a real file, and every ``repro.*``
+import or ``python -m repro...`` module referenced by a docs code snippet
+actually imports — so the docs cannot drift from the package silently."""
+
+import ast
+import glob
+import importlib
+import os
+import re
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = sorted([os.path.join(ROOT, "README.md")]
+                   + glob.glob(os.path.join(ROOT, "docs", "*.md")))
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```(\w*)\n(.*?)```", re.DOTALL)
+_MODULE_RE = re.compile(r"-m\s+(repro(?:\.\w+)+)")
+
+
+def _md(path):
+    with open(path) as f:
+        return f.read()
+
+
+@pytest.mark.parametrize("path", DOC_FILES,
+                         ids=[os.path.relpath(p, ROOT) for p in DOC_FILES])
+def test_intra_repo_links_resolve(path):
+    text = _md(path)
+    missing = []
+    for target in _LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            missing.append(target)
+    assert not missing, f"{os.path.relpath(path, ROOT)}: dead links {missing}"
+
+
+def _repro_imports(code):
+    """(module, [names]) pairs for every ``repro.*`` import in a snippet.
+    Snippets may be illustrative fragments (``>>>`` transcripts, elided
+    bodies), so non-parsing blocks are scanned line-by-line."""
+    out = []
+    try:
+        tree = ast.parse(code)
+    except SyntaxError:
+        lines = [l[4:] if l.startswith(">>> ") else l
+                 for l in code.splitlines()
+                 if l.startswith(">>> ") or l.startswith(("import repro",
+                                                          "from repro"))]
+        joined = "\n".join(l for l in lines
+                           if l.startswith(("import repro", "from repro")))
+        try:
+            tree = ast.parse(joined)
+        except SyntaxError:
+            return out
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module \
+                and node.module.split(".")[0] == "repro":
+            out.append((node.module, [a.name for a in node.names]))
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name.split(".")[0] == "repro":
+                    out.append((a.name, []))
+    return out
+
+
+@pytest.mark.parametrize("path", DOC_FILES,
+                         ids=[os.path.relpath(p, ROOT) for p in DOC_FILES])
+def test_snippet_symbols_import(path):
+    bad = []
+    for lang, code in _FENCE_RE.findall(_md(path)):
+        if lang in ("python", "py", ""):
+            for mod, names in _repro_imports(code):
+                try:
+                    m = importlib.import_module(mod)
+                except ImportError as e:
+                    bad.append(f"{mod}: {e}")
+                    continue
+                for n in names:
+                    if n != "*" and not hasattr(m, n):
+                        bad.append(f"{mod}.{n}")
+        if lang in ("bash", "sh", "shell", ""):
+            # find_spec, not import: repro.launch.dryrun sets XLA_FLAGS at
+            # import time, which must not leak into this pytest process
+            for mod in _MODULE_RE.findall(code):
+                if importlib.util.find_spec(mod) is None:
+                    bad.append(mod)
+    assert not bad, \
+        f"{os.path.relpath(path, ROOT)}: snippet symbols missing: {bad}"

@@ -99,6 +99,54 @@ def test_stack_unstack_roundtrip(name):
             np.asarray(a, np.float32) * mult, np.asarray(b, np.float32))
 
 
+@pytest.mark.parametrize("name", ["qwen2-1.5b", "deepseek-v3"])
+@pytest.mark.parametrize("sched,v", [("interleaved", 2), ("dualpipe", 2)])
+def test_chunked_stack_unstack_roundtrip(name, sched, v):
+    """The chunk-stacked layouts round-trip like the plain one, except that
+    dualpipe duplicates every layer across two ranks (gradients sum both
+    copies — the schedule's 2x parameter cost), and embed/head rows sum
+    over the ranks owning a first/last model chunk."""
+    from repro.models.pipeline import chunked_partition
+    spec = _smoke(name, 4)
+    pp = 2
+    model = build_model(spec)
+    params = model.init(jax.random.PRNGKey(0))
+    part = chunked_partition(spec, pp, schedule=sched, n_chunks=v)
+    rt = unstack_pipeline_grads(
+        stack_pipeline_params(params, spec, pp, schedule=sched, n_chunks=v),
+        params, spec, pp, schedule=sched, n_chunks=v)
+    emb_ranks = {r for r in range(pp) for c in range(part.n_chunks)
+                 if part.first_flag[r, c]
+                 or (spec.tie_embeddings and part.last_flag[r, c])}
+    head_ranks = {r for r in range(pp) for c in range(part.n_chunks)
+                  if part.last_flag[r, c]}
+    for (path, a), b in zip(jax.tree_util.tree_leaves_with_path(params),
+                            jax.tree.leaves(rt)):
+        p = str(path)
+        if "dense_layers" in p or "moe_layers" in p:
+            mult = 2.0 if sched == "dualpipe" else 1.0
+        elif "embed" in p:
+            mult = float(len(emb_ranks))
+        elif "final_norm" in p or "head" in p:
+            mult = float(len(head_ranks))
+        else:
+            mult = 1.0
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32) * mult, np.asarray(b, np.float32))
+
+
+def test_chunked_partition_matches_schedule_placement():
+    """Runtime chunk layout and analytic accounting share one placement."""
+    from repro.core import rank_chunk_layers, schedule_placement
+    from repro.models.pipeline import chunked_partition
+    spec = _smoke("qwen2-1.5b", 8)
+    for sched, v in [("1f1b", 1), ("interleaved", 2), ("dualpipe", 2)]:
+        part = chunked_partition(spec, 4, schedule=sched, n_chunks=v)
+        assert part.placement == schedule_placement(sched, 4, v)
+        assert part.chunks == rank_chunk_layers(spec, 4, schedule=sched,
+                                                n_chunks=v)
+
+
 def test_pipeline_unsupported_families():
     for name in ("rwkv6-1.6b", "whisper-tiny", "qwen2-vl-72b"):
         with pytest.raises(NotImplementedError):
@@ -125,6 +173,38 @@ def test_estimate_memory_in_flight_scales_stage0():
     assert base[0] == 16 * flat * \
         estimate_memory(spec, cfg, stage=0,
                         in_flight_microbatches=1).activations / flat
+
+
+def test_schedule_planner_guards():
+    """Schedule-aware planning rejects invalid arguments loudly and never
+    admits configs the executor would refuse."""
+    from repro.core import rank_chunk_layers
+    spec = dataclasses.replace(get_spec("qwen2-1.5b"), n_layers=4)
+    budget = 64 * 2 ** 30
+    # interleaved with default n_chunks=1 is a caller error, not "no fit"
+    with pytest.raises(ValueError):
+        plan(spec, 8, budget, schedule="interleaved")
+    # pp*v > n_layers configs are skipped, feasible pp values survive
+    entries = plan(spec, 8, budget, top_k=64, schedule="interleaved",
+                   n_chunks=2)
+    assert entries and all(e.cfg.pp * 2 <= spec.n_layers or e.cfg.pp == 1
+                           for e in entries)
+    with pytest.raises(ValueError):
+        rank_chunk_layers(spec, 8, schedule="interleaved", n_chunks=2)
+    # dualpipe pp=1 would silently double the whole model onto one rank
+    with pytest.raises(ValueError):
+        rank_chunk_layers(spec, 1, schedule="dualpipe", n_chunks=2)
+    with pytest.raises(ValueError):
+        estimate_memory(spec, ParallelConfig(pp=1), stage=0,
+                        schedule="dualpipe", n_chunks=2)
+    # schedule-aware accounting is training-only
+    with pytest.raises(ValueError):
+        estimate_memory(spec, ParallelConfig(pp=2), stage=0,
+                        schedule="1f1b", training=False)
+    # the legacy residency knob conflicts with the schedule path
+    with pytest.raises(ValueError):
+        estimate_memory(spec, ParallelConfig(pp=2), stage=0,
+                        schedule="1f1b", in_flight_microbatches=4)
 
 
 def test_planner_headroom_and_pp_in_flight():

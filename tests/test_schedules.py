@@ -1,0 +1,188 @@
+"""Schedule tick-sequence invariants, for every schedule × (pp, v, M):
+
+* every microbatch is forwarded exactly once per model chunk (virtual
+  stage), and backwarded exactly once;
+* each backward runs at/after its forward; cross-rank dependencies respect
+  the one-tick transfer latency; one op per rank per canonical tick;
+* the canonical peak in-flight matches the closed forms in
+  ``core.schedule_in_flight`` (the formulas ``estimate_memory`` and the
+  planner consume);
+* the executor tables route every boundary tensor to the slot its consumer
+  reads, without clobbering a live slot (symbolic replay of the tick loop).
+
+A deterministic grid always runs; hypothesis widens the search when
+installed (CI installs requirements-dev.txt).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.schedules import (PipelineSchedule, exec_tick_times,
+                                  make_schedule, schedule_placement)
+from repro.core.activations import one_f1b_in_flight, schedule_in_flight
+from repro.train.schedules import build_exec_tables
+
+GRID = (
+    [("1f1b", pp, m, 1) for pp in (1, 2, 3, 4) for m in (1, 2, 5, 8)]
+    + [("interleaved", pp, m, v)
+       for pp in (2, 3, 4) for v in (2, 3) for m in (pp, 2 * pp, 4 * pp)]
+    + [("dualpipe", pp, m, 2) for pp in (2, 3, 4, 5) for m in (1, 2, 5, 8)]
+)
+
+
+def _closed_form(name, pp, m, v):
+    return [schedule_in_flight(pp, r, m, schedule=name, n_chunks=v)
+            for r in range(pp)]
+
+
+def _check_exec_routing(sched: PipelineSchedule) -> None:
+    """Replay the executor tables symbolically: buffers hold (micro, stage)
+    tags; every read must see the tag the schedule promises."""
+    tab = build_exec_tables(sched)
+    pp, G, M = tab.pp, tab.n_stages, tab.n_micro
+    own = [[sched.owner(g, m) for g in range(G)] for m in range(M)]
+    stage_at = {}
+    for m in range(M):
+        for g in range(G):
+            stage_at[(m,) + own[m][g]] = g
+    xbuf = [[None] * (tab.n_chunks * tab.x_slots) for _ in range(pp)]
+    gbuf = [[None] * (tab.n_chunks * tab.g_slots) for _ in range(pp)]
+    fouts, bouts = {}, {}
+    for t in range(tab.T):
+        for r in range(pp):
+            if tab.f_act[t, r] > 0:
+                m, c = int(tab.f_micro[t, r]), int(tab.f_chunk[t, r])
+                g = stage_at[(m, r, c)]
+                if g > 0:
+                    assert xbuf[r][int(tab.f_xidx[t, r])] == (m, g - 1), \
+                        f"t{t} r{r}: F({m},{g}) read a stale boundary input"
+                fouts[(t, r)] = (m, g)
+            if tab.b_act[t, r] > 0:
+                m, c = int(tab.b_micro[t, r]), int(tab.b_chunk[t, r])
+                g = stage_at[(m, r, c)]
+                if g > 0:
+                    assert xbuf[r][int(tab.b_xidx[t, r])] == (m, g - 1)
+                if g < G - 1:
+                    assert gbuf[r][int(tab.b_gidx[t, r])] == (m, g + 1), \
+                        f"t{t} r{r}: B({m},{g}) read a stale cotangent"
+                bouts[(t, r)] = (m, g)
+        for r in range(pp):
+            if tab.rfd_act[t, r] > 0:
+                assert tab.fsend_down[t, (r - 1) % pp] > 0
+                xbuf[r][int(tab.rfd_idx[t, r])] = fouts[(t, (r - 1) % pp)]
+            if tab.rfu_act[t, r] > 0:
+                assert tab.fsend_up[t, (r + 1) % pp] > 0
+                xbuf[r][int(tab.rfu_idx[t, r])] = fouts[(t, (r + 1) % pp)]
+            if tab.rgd_act[t, r] > 0:
+                assert tab.bsend_down[t, (r - 1) % pp] > 0
+                gbuf[r][int(tab.rgd_idx[t, r])] = bouts[(t, (r - 1) % pp)]
+            if tab.rgu_act[t, r] > 0:
+                assert tab.bsend_up[t, (r + 1) % pp] > 0
+                gbuf[r][int(tab.rgu_idx[t, r])] = bouts[(t, (r + 1) % pp)]
+
+
+@pytest.mark.parametrize("name,pp,m,v", GRID)
+def test_schedule_invariants(name, pp, m, v):
+    if name != "1f1b" and pp < 2:
+        pytest.skip("multi-chunk schedules need pp >= 2")
+    sched = make_schedule(name, pp, m, n_chunks=v)
+    sched.check()   # exactly-once F/B per (micro, chunk), deps, capacity
+    peaks = [sched.rank_peak_in_flight(r) for r in range(pp)]
+    assert peaks == _closed_form(name, pp, m, v), \
+        f"{name} pp={pp} M={m} v={v}: simulated {peaks}"
+
+
+@pytest.mark.parametrize("name,pp,m,v", [g for g in GRID if g[1] > 1])
+def test_exec_tables_route_correctly(name, pp, m, v):
+    _check_exec_routing(make_schedule(name, pp, m, n_chunks=v))
+
+
+def test_1f1b_exec_timing_nests_canonical_order():
+    """The executor timeline preserves the canonical per-rank op order, and
+    its boundary-input ring stays within PR 1's 1F1B bound min(M, 2pp-1)
+    (the executor packs one F and one B per tick, so residency between a
+    boundary input's arrival and its backward can exceed the canonical
+    one-op-per-tick count, but never the classic ring bound)."""
+    for pp, m in [(2, 4), (4, 4), (4, 8)]:
+        sched = make_schedule("1f1b", pp, m)
+        tab = build_exec_tables(sched)
+        assert 1 <= tab.x_slots <= min(m, 2 * pp - 1)
+        assert tab.g_slots == 1
+        times = exec_tick_times(sched)
+        for r in range(pp):
+            f_ts = [times[("F", mm, r)] for mm in range(m)]
+            b_ts = [times[("B", mm, r)] for mm in range(m)]
+            assert f_ts == sorted(f_ts) and b_ts == sorted(b_ts)
+
+
+def test_dualpipe_profile_flat_and_duplicated():
+    """DualPipe's signature: every rank ≈ pp+1 in flight, every model chunk
+    placed on two ranks."""
+    pp, m = 4, 8
+    sched = make_schedule("dualpipe", pp, m)
+    assert [sched.rank_peak_in_flight(r) for r in range(pp)] == [pp + 1] * pp
+    placement = schedule_placement("dualpipe", pp, 2)
+    owners = {}
+    for r, row in enumerate(placement):
+        for g in row:
+            owners.setdefault(g, []).append(r)
+    assert all(len(rs) == 2 for rs in owners.values())
+
+
+def test_one_f1b_in_flight_compat():
+    assert [one_f1b_in_flight(4, s) for s in range(4)] == [4, 3, 2, 1]
+    assert one_f1b_in_flight(4, 0, n_micro=2) == 2
+    with pytest.raises(ValueError):
+        one_f1b_in_flight(4, 4)
+
+
+def test_interleaved_needs_pp_multiple():
+    with pytest.raises(ValueError):
+        make_schedule("interleaved", 4, 6, n_chunks=2)
+    with pytest.raises(ValueError):
+        make_schedule("interleaved", 2, 4, n_chunks=1)
+
+
+# ---------------------------------------------------------------------------
+# Property-based widening (CI installs hypothesis; skipped when absent,
+# without taking the deterministic grid above down with it)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(pp=st.integers(1, 6), m=st.integers(1, 12))
+    def test_hyp_1f1b(pp, m):
+        sched = make_schedule("1f1b", pp, m)
+        sched.check()
+        assert [sched.rank_peak_in_flight(r) for r in range(pp)] == \
+            [min(m, pp - r) for r in range(pp)]
+        if pp > 1:
+            _check_exec_routing(sched)
+
+    @settings(max_examples=40, deadline=None)
+    @given(pp=st.integers(2, 5), v=st.integers(2, 4),
+           groups=st.integers(1, 3))
+    def test_hyp_interleaved(pp, v, groups):
+        m = pp * groups
+        sched = make_schedule("interleaved", pp, m, n_chunks=v)
+        sched.check()
+        assert [sched.rank_peak_in_flight(r) for r in range(pp)] == \
+            [min(m * v, (v - 1) * pp + 2 * (pp - r - 1) + 1)
+             for r in range(pp)]
+        _check_exec_routing(sched)
+
+    @settings(max_examples=40, deadline=None)
+    @given(pp=st.integers(2, 6), m=st.integers(1, 12))
+    def test_hyp_dualpipe(pp, m):
+        sched = make_schedule("dualpipe", pp, m)
+        sched.check()
+        ma, mb = (m + 1) // 2, m // 2
+        assert [sched.rank_peak_in_flight(r) for r in range(pp)] == \
+            [min(ma, pp - r) + min(mb, r + 1) for r in range(pp)]
+        _check_exec_routing(sched)
