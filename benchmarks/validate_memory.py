@@ -127,9 +127,19 @@ def validate_one(arch: str, shape: str, mesh_tag: str = "pod16x16",
     return out
 
 
+def _parse_mesh_tag(tag: str):
+    """'pod16x16' / 'pod2x16x16' / 'pod16x2' -> (n_pods, data, model)."""
+    body = tag[len("pod"):]
+    pods = 1
+    if body.startswith("2x") and body.count("x") == 2:
+        pods, body = 2, body[2:]
+    data, model = (int(x) for x in body.split("x"))
+    return pods, data, model
+
+
 def validate_pp(arch: str, shape: str, pp: int,
                 mesh_tag: str = "pod16x16", schedule: str = "1f1b",
-                n_chunks: int = 1,
+                n_chunks: int = 1, zero: str = "os+g",
                 tag_suffix: str = "") -> Optional[Dict[str, Any]]:
     """Per-rank validation of a ``dryrun --pp N [--schedule ...]`` artifact:
     XLA's per-rank temp bytes (activations + grads + transients of the rank
@@ -145,9 +155,10 @@ def validate_pp(arch: str, shape: str, pp: int,
     microbatches every rank holds one in flight and the ratio degenerates
     to ~1."""
     sched_tag = "" if schedule == "1f1b" else f"__{schedule}{n_chunks}"
+    zero_tag = "" if zero == "os+g" else f"__z{zero.replace('+', '')}"
     path = os.path.join(
-        DRY,
-        f"{arch}__{shape}__{mesh_tag}__pp{pp}{sched_tag}{tag_suffix}.json")
+        DRY, f"{arch}__{shape}__{mesh_tag}__pp{pp}{sched_tag}{zero_tag}"
+             f"{tag_suffix}.json")
     if not os.path.exists(path):
         return None
     with open(path) as f:
@@ -161,7 +172,11 @@ def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
     schedule = rec.get("schedule", "1f1b")
     if rec.get("status") != "ok":
         return {"arch": arch, "shape": shape, "pp": pp,
-                "schedule": schedule, "status": rec.get("status")}
+                "schedule": schedule, "n_chunks": rec.get("n_chunks", 1),
+                "tp": rec.get("tp"),
+                "zero": rec.get("zero",
+                                rec.get("options", {}).get("zero", "os+g")),
+                "status": rec.get("status")}
     stages = rec["stages"]
     temps = [s["memory"].get("temp_size_in_bytes", 0) for s in stages]
     acts = [s["analytic"]["activations"] for s in stages]
@@ -174,10 +189,9 @@ def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
     from repro.launch.specs import SHAPES
     spec = get_spec(arch)
     info = SHAPES[shape]
-    model_ax = int(mesh_tag.split("x")[-1])
+    pods, data, model_ax = _parse_mesh_tag(mesh_tag)
     n_micro = max(rec.get("options", {}).get("n_micro", 1), 1)
-    n_chips = 512 if mesh_tag.startswith("pod2x") else 256
-    data_ax = n_chips // model_ax // pp
+    data_ax = max(data // pp, 1) * pods
     b_dev = max(info["batch"] // n_micro // max(data_ax, 1), 1)
     logits = b_dev * info["seq"] * spec.vocab * 4
     if spec.vocab % model_ax == 0:
@@ -197,6 +211,8 @@ def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
     return {
         "arch": arch, "shape": shape, "pp": pp, "status": "ok",
         "schedule": schedule, "n_chunks": rec.get("n_chunks", 1),
+        "tp": rec.get("tp", model_ax),
+        "zero": rec.get("zero", rec.get("options", {}).get("zero", "os+g")),
         "n_micro": n_micro,
         "stages": [{
             "stage": s["stage"], "layers": s["layers"],
@@ -213,14 +229,26 @@ def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
 
 
 def _pp_artifacts() -> List[Dict[str, Any]]:
+    """One validation row per distinct (arch, shape, pp, schedule, n_chunks,
+    tp, zero, n_micro) configuration.  Artifacts are deduped on that key —
+    re-runs under a different tag suffix (e.g. legacy ``__nm8`` files next
+    to fresh defaults) previously appended duplicate rows to
+    validation_pp.json; now the newest artifact (mtime) wins."""
     import glob
-    rows = []
-    for p in sorted(glob.glob(os.path.join(DRY, "*__pp*.json"))):
+    by_key: Dict[Any, Dict[str, Any]] = {}
+    paths = sorted(glob.glob(os.path.join(DRY, "*__pp*.json")),
+                   key=os.path.getmtime)
+    for p in paths:
         with open(p) as f:
             rec = json.load(f)
-        if "pp" in rec:
-            rows.append(_validate_pp_rec(rec))
-    return rows
+        if "pp" not in rec:
+            continue
+        row = _validate_pp_rec(rec)
+        key = (row.get("arch"), row.get("shape"), row.get("pp"),
+               row.get("schedule"), row.get("n_chunks"), row.get("tp"),
+               row.get("zero"), row.get("n_micro"))
+        by_key[key] = row            # newest artifact wins
+    return [by_key[k] for k in sorted(by_key, key=lambda k: tuple(map(str, k)))]
 
 
 def main():
@@ -254,19 +282,21 @@ def main():
     if pp_rows:
         with open(os.path.join(ART, "validation_pp.json"), "w") as f:
             json.dump(pp_rows, f, indent=1)
-        print("\n## Per-rank schedule residency (dryrun --pp --schedule) vs "
-              "estimate_memory(stage=r, schedule=...)")
-        print("| arch | shape | pp | schedule | n_micro |"
+        print("\n## Per-rank schedule residency (dryrun --pp [--tp --zero "
+              "--schedule]) vs estimate_memory(stage=r, schedule=...)")
+        print("| arch | shape | pp | tp | zero | schedule | n_micro |"
               " rank0/last XLA (logits-adj) | rank0/last analytic act |"
               " direction |")
-        print("|---|---|---|---|---|---|---|---|")
+        print("|---|---|---|---|---|---|---|---|---|---|")
         for r in pp_rows:
             if r.get("status") != "ok":
                 print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
+                      f" {r.get('tp', '-')} | {r.get('zero', '-')} |"
                       f" {r.get('schedule', '1f1b')} | - | - | - |"
                       f" {r.get('status')} |")
                 continue
             print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
+                  f" {r['tp']} | {r['zero']} |"
                   f" {r['schedule']} | {r['n_micro']} |"
                   f" {r['measured_ratio_stage0_over_last']:.2f} |"
                   f" {r['analytic_ratio_stage0_over_last']:.2f} |"

@@ -28,8 +28,9 @@ for arch in ASSIGNED:
             break
     if found:
         w, e = found
+        run = "runnable" if e.runnable else f"dry-run ({e.why_not_runnable})"
         print(f"{arch:<22}{w:>6}  {e.cfg.describe():<72} "
-              f"{human_bytes(e.estimate.total)}")
+              f"{human_bytes(e.estimate.total)}  [{run}]")
     else:
         print(f"{arch:<22}{'—':>6}  does not fit <=2048 chips at 16 GiB "
               f"(needs more aggressive sharding)")

@@ -9,13 +9,14 @@ from .activations import (layer_activation_bytes, moe_activation_bytes,
 from .memory_model import MemoryEstimate, estimate_memory, fits, kv_cache_bytes
 from .notation import (AttentionKind, EncoderSpec, FamilyKind, MLASpec,
                        MlpKind, MoESpec, ModelSpec, SSMSpec, human_bytes,
-                       human_count)
+                       human_count, tp_violations)
 from .parallel_config import (BF16_POLICY, FP8_POLICY, PAPER_CONFIG,
                               DTypePolicy, ParallelConfig, RecomputePolicy,
                               ZeROStage)
 from .params import (DeviceParams, device_params, max_stage, table3_rows,
                      table4_stages, total_params_paper)
-from .planner import enumerate_configs, min_memory_config, plan
+from .planner import (PlanEntry, enumerate_configs, executor_runnable,
+                      min_memory_config, plan)
 from .schedules import (SCHEDULES, PipelineSchedule, TickOp, make_schedule,
                         n_model_chunks, schedule_placement)
 from .zero import TrainStateBytes, zero_memory, zero_table
@@ -25,13 +26,14 @@ __all__ = [
     "EncoderSpec", "FP8_POLICY", "FamilyKind", "MLASpec", "MemoryEstimate",
     "MlpKind", "MoESpec", "ModelSpec", "PAPER_CONFIG", "ParallelConfig",
     "RecomputePolicy", "SSMSpec", "TrainStateBytes", "ZeROStage",
-    "PipelineSchedule", "SCHEDULES", "TickOp",
-    "device_params", "enumerate_configs", "estimate_memory", "fits",
+    "PipelineSchedule", "PlanEntry", "SCHEDULES", "TickOp",
+    "device_params", "enumerate_configs", "estimate_memory",
+    "executor_runnable", "fits",
     "human_bytes", "human_count", "kv_cache_bytes", "layer_activation_bytes",
     "make_schedule", "max_stage", "min_memory_config", "mla_activation_bytes",
     "moe_activation_bytes", "n_model_chunks", "one_f1b_in_flight", "plan",
     "rank_chunk_layers", "schedule_activation_bytes", "schedule_in_flight",
     "schedule_placement", "stage_activation_bytes", "table10",
-    "table3_rows", "table4_stages", "total_params_paper", "zero_memory",
-    "zero_table",
+    "table3_rows", "table4_stages", "total_params_paper", "tp_violations",
+    "zero_memory", "zero_table",
 ]

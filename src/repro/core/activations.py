@@ -20,10 +20,49 @@ Conventions (paper §5):
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from typing import Dict, Optional
 
 from .notation import AttentionKind, FamilyKind, MlpKind, ModelSpec
 from .parallel_config import ParallelConfig, RecomputePolicy
+
+
+def _shard_or_warn(dim: int, tp: int, what: str) -> int:
+    """Effective TP divisor of a *channel/fused*-sharded dimension (qkv
+    columns, ff hidden, ssm channels): ``tp`` when it divides exactly,
+    else 1 (the tensor is replicated — same fallback as ``params._shard``)
+    with a loud warning.  Before this guard the formulas silently
+    floor-divided, which under-counted indivisible combos."""
+    if tp <= 1:
+        return 1
+    if dim % tp == 0:
+        return tp
+    warnings.warn(
+        f"tp={tp} does not divide {what}={dim}; modeling this tensor as "
+        f"TP-replicated (the runtime's indivisible-dim fallback)",
+        RuntimeWarning, stacklevel=3)
+    return 1
+
+
+def _head_shard_or_warn(n_heads: int, tp: int, what: str) -> int:
+    """Effective TP divisor of a *head-count*-sharded tensor (the s²
+    score/softmax buffers, laid out (b, n_h, s, s)): heads split evenly at
+    most gcd(n_h, tp) ways.  The fused qkv columns may still shard the
+    full ``tp`` ways (sub-head column splits — e.g. n_h=12 columns on a
+    16-wide model axis), so this clamp applies only to the head-indexed
+    tensors; warn loudly whenever the degree degrades."""
+    if tp <= 1:
+        return 1
+    if n_heads % tp == 0:
+        return tp
+    g = math.gcd(n_heads, tp)
+    warnings.warn(
+        f"tp={tp} does not divide {what}={n_heads}; head-sharded score "
+        f"tensors split at most gcd={g} ways (fused qkv columns still "
+        f"shard tp ways when divisible)",
+        RuntimeWarning, stacklevel=3)
+    return g
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,14 +96,16 @@ def mla_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
     s = s // cp
     if recompute == RecomputePolicy.FULL:
         return 2 * b * s * spec.h // sp
-    scores = 5 * b * spec.n_h * s * s // tp
+    tp_c = _shard_or_warn(spec.n_h * m.d_h, tp, "n_h*d_h")
+    scores = 5 * b * spec.n_h * s * s \
+        // _head_shard_or_warn(spec.n_h, tp, "n_h")
     none_total = (
         4 * b * s * spec.h // sp
         + 2 * b * s * (m.d_cq + m.d_c)
-        + 4 * b * s * (m.d_h + m.d_hr) * spec.n_h // tp
-        + 2 * b * s * m.d_v * spec.n_h // tp
+        + 4 * b * s * (m.d_h + m.d_hr) * spec.n_h // tp_c
+        + 2 * b * s * m.d_v * spec.n_h // tp_c
         + scores
-        + 2 * b * s * m.d_v * spec.n_h // tp
+        + 2 * b * s * m.d_v * spec.n_h // tp_c
         + b * s * spec.h // sp
     )
     if recompute == RecomputePolicy.SELECTIVE:
@@ -91,7 +132,7 @@ def moe_activation_bytes(spec: ModelSpec, b: int, s: int, *, sp: int, cp: int,
     s = s // cp
     if recompute == RecomputePolicy.FULL:
         return b * s * spec.h + 2 * b * s * e.n_active
-    n_local = e.n_routed // ep
+    n_local = e.n_routed // _shard_or_warn(e.n_routed, ep, "n_routed (EP)")
     e_token = b * s * e.n_active / e.n_routed
     routed = n_local * (3 * e_token * spec.h + 8 * e_token * e.d_ff_expert)
     shared = e.n_shared * (3 * b * s * spec.h + 8 * b * s * e.d_ff_expert)
@@ -118,14 +159,21 @@ def gqa_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
     if recompute == RecomputePolicy.FULL:
         return 2 * b * s * spec.h // sp
     d = spec.d_head
+    tp_c = _shard_or_warn(spec.n_h * d, tp, "n_h*d_head")
+    # kv-head clamp: K/V shard at most n_kv ways (min(tp, n_kv) — the same
+    # clamp kv_cache_bytes applies on the decode path), degrading to
+    # gcd when the clamped degree doesn't divide n_kv
     kv_shard = min(tp, spec.n_kv)
-    scores = 5 * b * spec.n_h * s * s // tp
+    if kv_shard > 1 and spec.n_kv % kv_shard:
+        kv_shard = _head_shard_or_warn(spec.n_kv, kv_shard, "n_kv")
+    scores = 5 * b * spec.n_h * s * s \
+        // _head_shard_or_warn(spec.n_h, tp, "n_h")
     total = (
         2 * b * s * spec.h // sp                      # norm output (QKV input)
-        + 2 * b * s * spec.n_h * d // tp              # Q
+        + 2 * b * s * spec.n_h * d // tp_c            # Q
         + 2 * 2 * b * s * spec.n_kv * d // kv_shard   # K, V
         + scores
-        + 2 * b * s * spec.n_h * d // tp              # attn context
+        + 2 * b * s * spec.n_h * d // tp_c            # attn context
         + b * s * spec.h // sp                        # o-proj output grad buffer
     )
     if recompute == RecomputePolicy.SELECTIVE:
@@ -139,6 +187,7 @@ def dense_mlp_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int,
     s = s // cp
     if recompute == RecomputePolicy.FULL:
         return 2 * b * s * spec.h // sp
+    tp = _shard_or_warn(spec.h_ff, tp, "h_ff") if spec.h_ff else 1
     inp = 2 * b * s * spec.h // sp
     if spec.mlp in (MlpKind.SWIGLU, MlpKind.GEGLU):
         hidden = 3 * 2 * b * s * spec.h_ff // tp      # gate, up, gated product
@@ -159,6 +208,7 @@ def ssm_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
     state = 2 * b * ss.n_ssm_heads * (d // max(ss.n_ssm_heads, 1)) * ss.state_dim
     if recompute == RecomputePolicy.FULL:
         return 2 * b * s * spec.h // sp + state
+    tp = _shard_or_warn(d, tp, "ssm channel dim")
     proj = 5 * 2 * b * s * d // tp                    # r,k,v,g,w trajectories
     out = 2 * b * s * d // tp
     total = 2 * b * s * spec.h // sp + proj + out + state

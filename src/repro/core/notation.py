@@ -260,6 +260,28 @@ class ModelSpec:
         return self.total_params() - per_layer_delta * self.n_moe_layers()
 
 
+def tp_violations(spec: "ModelSpec", tp: int):
+    """Dims a TP degree fails to divide exactly, as human-readable strings
+    (empty list = cleanly divisible).  Shared by the analytic guard
+    (``core.activations``), the planner's runnable marking and the
+    executor's hard check (``parallel.tp.check_tp_supported``)."""
+    if tp <= 1:
+        return []
+    bad = []
+    if spec.attention != AttentionKind.NONE and spec.n_h % tp:
+        bad.append(f"n_h={spec.n_h}")
+    if spec.attention not in (AttentionKind.NONE, AttentionKind.MLA) \
+            and spec.n_kv % tp:
+        bad.append(f"n_kv={spec.n_kv}")
+    if spec.h_ff and spec.h_ff % tp:
+        bad.append(f"h_ff={spec.h_ff}")
+    if spec.is_moe and spec.moe.d_ff_expert % tp:
+        bad.append(f"d_ff_expert={spec.moe.d_ff_expert}")
+    if spec.vocab % tp:
+        bad.append(f"vocab={spec.vocab}")
+    return bad
+
+
 def human_bytes(n: float) -> str:
     """GiB-based formatting matching the paper's 'GB' (actually GiB) usage."""
     for unit, div in (("GiB", 2**30), ("MiB", 2**20), ("KiB", 2**10)):

@@ -14,8 +14,11 @@ Public entry points:
   ``world_size`` devices (PP ≤ n_layers, TP | n_heads, EP | n_experts).
 * ``plan(spec, world_size, hbm_bytes, *, seq_len, top_k, pp_in_flight,
   schedule, n_chunks)`` — feasible configs under the HBM budget,
-  best-first, each as a ``PlanEntry`` carrying its ``MemoryEstimate`` and
-  ``headroom`` against the budget.  ``pp_in_flight`` prices pp>1 configs
+  best-first, each as a ``PlanEntry`` carrying its ``MemoryEstimate``,
+  ``headroom`` against the budget, and a ``runnable`` flag — True exactly
+  when the 3D pipeline executor (``train.pipeline_loop``) can run the
+  config end to end; estimator/dry-run-only configs carry
+  ``why_not_runnable``.  ``pp_in_flight`` prices pp>1 configs
   at the pipeline schedule's steady-state residency (default plain 1F1B;
   ``schedule='interleaved'|'dualpipe'`` uses the schedule-aware
   ``estimate_memory`` — see ``docs/pipeline-schedules.md``).
@@ -34,7 +37,7 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 
 from .activations import one_f1b_in_flight
 from .memory_model import MemoryEstimate, estimate_memory
-from .notation import ModelSpec
+from .notation import AttentionKind, FamilyKind, ModelSpec, tp_violations
 from .parallel_config import ParallelConfig, RecomputePolicy, ZeROStage
 
 
@@ -43,10 +46,54 @@ class PlanEntry:
     cfg: ParallelConfig
     estimate: MemoryEstimate
     budget: Optional[int] = None    # HBM bytes the plan was ranked against
+    # Whether train.pipeline_loop's 3D executor can actually run this config
+    # end to end (vs. estimator/dry-run-only); see executor_runnable().
+    runnable: bool = True
+    why_not_runnable: str = ""
 
     @property
     def headroom(self) -> int:
         return self.budget - self.estimate.total if self.budget else 0
+
+
+def executor_runnable(spec: ModelSpec, cfg: ParallelConfig, *,
+                      schedule: str = "1f1b") -> Tuple[bool, str]:
+    """Can ``train.pipeline_loop.make_pipeline_train_step`` execute this
+    config?  (False, reason) for estimator/dry-run-only configurations.
+
+    The executor runs dense/MoE decoder-only families on
+    ('pipe','data','model') meshes with manual TP (exact divisibility
+    required), ZeRO os / os+g via sharding constraints, and ETP-style MoE
+    (all experts on every shard, expert-ff sharded) — so EP placement,
+    ZeRO-3 parameter partitioning, context parallelism and the recurrent /
+    enc-dec / VLM families remain analytic or GSPMD-dry-run territory.
+    Sequence parallelism is an estimator refinement (it changes modeled
+    bytes, not runnability)."""
+    if spec.ssm is not None:
+        return False, "SSM/hybrid family (pipeline runtime unsupported)"
+    if spec.encoder is not None:
+        return False, "enc-dec family (pipeline runtime unsupported)"
+    if spec.family == FamilyKind.VLM:
+        return False, "VLM frontend (pipeline runtime unsupported)"
+    if spec.attention == AttentionKind.NONE:
+        return False, "attention-free family (pipeline runtime unsupported)"
+    bad = tp_violations(spec, cfg.tp)
+    if bad:
+        return False, f"tp={cfg.tp} does not divide {', '.join(bad)}"
+    if cfg.cp > 1:
+        return False, "context parallelism not executed"
+    if spec.is_moe and cfg.ep > 1:
+        return False, "EP placement is dry-run-only (executor uses ETP)"
+    if cfg.etp not in (1, cfg.tp):
+        return False, f"executor ties ETP to TP (etp={cfg.etp}, tp={cfg.tp})"
+    if cfg.zero == ZeROStage.OS_G_PARAMS:
+        return False, "ZeRO-3 parameter partitioning is dry-run-only"
+    if schedule == "dualpipe" and cfg.pp < 2:
+        return False, "dualpipe needs pp >= 2"
+    # schedule constraints on the microbatch *count* (e.g. interleaved's
+    # n_micro % pp == 0) are runtime arguments, not ParallelConfig fields —
+    # they surface when the step is built, not here
+    return True, ""
 
 
 def _divisors(n: int, cap: int = 1 << 30) -> List[int]:
@@ -133,7 +180,9 @@ def plan(spec: ModelSpec, world_size: int, hbm_bytes: int, *,
             in_flight = one_f1b_in_flight(cfg.pp, 0) if pp_in_flight else None
             est = estimate_memory(spec, cfg, in_flight_microbatches=in_flight)
         if est.total <= hbm_bytes:
-            entries.append(PlanEntry(cfg, est, budget=hbm_bytes))
+            ok, why = executor_runnable(spec, cfg, schedule=schedule)
+            entries.append(PlanEntry(cfg, est, budget=hbm_bytes,
+                                     runnable=ok, why_not_runnable=why))
     entries.sort(key=lambda e: (order_r[e.cfg.recompute], -e.cfg.micro_batch,
                                 e.cfg.tp * e.cfg.pp, e.estimate.total))
     return entries[:top_k]

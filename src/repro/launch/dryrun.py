@@ -15,23 +15,28 @@ Usage:
       --zero os+g --recompute full --attn chunked --n-micro 16
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1_5b --shape train_4k \
       --pp 4 --n-micro 8 --schedule dualpipe
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1_5b --shape train_4k \
+      --pp 2 --tp 2 --zero os --n-micro 8
 
 Arguments (see ``main()``): ``--arch``/``--shape`` or ``--all`` select the
 combos; ``--zero``, ``--recompute``, ``--attn``, ``--n-micro``,
 ``--capacity-factor``, ``--moe-impl`` configure the lowered program;
-``--mesh-shape``/``--multi-pod`` the fake device grid.  With ``--pp N``
-(> 1) each pipeline rank is compiled as its own program holding the
-schedule's in-flight microbatch counts (``--schedule
-{1f1b,interleaved,dualpipe}``, ``--pp-chunks`` virtual stages per rank)
-next to ``estimate_memory(stage=r, schedule=...)`` — the measurement side
-of ``docs/pipeline-schedules.md``.
+``--mesh-shape``/``--multi-pod`` the fake device grid, ``--tp N`` overrides
+just its 'model' axis (so ``--pp --tp --zero`` compose into joint 3D+ZeRO
+probes on small fake meshes).  With ``--pp N`` (> 1) each pipeline rank is
+compiled as its own program holding the schedule's in-flight microbatch
+counts (``--schedule {1f1b,interleaved,dualpipe}``, ``--pp-chunks`` virtual
+stages per rank) next to ``estimate_memory(stage=r, schedule=...)`` — the
+measurement side of ``docs/pipeline-schedules.md``.
 
 Artifacts: one JSON per combo in ``benchmarks/artifacts/dryrun/<tag>.json``
-(tag = arch__shape__mesh[__ppN[__<schedule><v>]][suffix]) with status,
-lower/compile wall-times, ``memory_analysis`` fields, flops/bytes from
-``cost_analysis``, per-collective HLO byte counts (plain runs) or the
-per-rank records (``--pp`` runs: layers, per-chunk in-flight, memory,
-analytic breakdown).  Existing artifacts are reused unless ``--force``;
+(tag = arch__shape__mesh[__ppN[__<schedule><v>]][__z<zero>][suffix]; the
+mesh component encodes tp, the ``__z`` component appears for non-default
+``--zero``) with status, lower/compile wall-times, ``memory_analysis``
+fields, flops/bytes from ``cost_analysis``, per-collective HLO byte counts
+(plain runs) or the per-rank records (``--pp`` runs: layers, per-chunk
+in-flight, memory, analytic breakdown, plus top-level ``tp``/``zero``).
+Existing artifacts are reused unless ``--force``;
 ``benchmarks/validate_memory.py`` consumes them.
 """
 
@@ -349,7 +354,10 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
     mesh_tag = ("pod2x" if multi_pod else "pod") + f"{data}x{model_ax}"
     v = norm_chunks(schedule, n_chunks)
     sched_tag = "" if schedule == "1f1b" else f"__{schedule}{v}"
-    tag = f"{arch}__{shape_name}__{mesh_tag}__pp{pp}{sched_tag}{tag_suffix}"
+    zero = build_kw.get("zero", "os+g")
+    zero_tag = "" if zero == "os+g" else f"__z{zero.replace('+', '')}"
+    tag = (f"{arch}__{shape_name}__{mesh_tag}__pp{pp}{sched_tag}{zero_tag}"
+           f"{tag_suffix}")
     path = os.path.join(ART_DIR, tag + ".json")
     if os.path.exists(path) and not force:
         with open(path) as f:
@@ -358,6 +366,7 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
     info = SHAPES[shape_name]
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "pp": pp,
                            "schedule": schedule, "n_chunks": v,
+                           "tp": model_ax, "zero": zero,
                            "mesh": mesh_tag, "options": build_kw}
     try:
         if info["kind"] != "train":
@@ -537,6 +546,10 @@ def main() -> int:
     ap.add_argument("--pp", type=int, default=1,
                     help="pipeline stages: >1 compiles each stage as its own "
                          "program and records per-stage memory_analysis")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="override the mesh's 'model' axis (TP degree) — "
+                         "with --pp/--zero this gives joint 3D+ZeRO probes "
+                         "on small fake meshes, e.g. --pp 2 --tp 2 --zero os")
     ap.add_argument("--schedule", default="1f1b",
                     choices=["1f1b", "interleaved", "dualpipe"],
                     help="pipeline schedule for --pp probes: sets per-rank "
@@ -553,6 +566,9 @@ def main() -> int:
     args = ap.parse_args()
     mesh_shape = tuple(int(x) for x in args.mesh_shape.split("x")) \
         if args.mesh_shape else None
+    if args.tp:
+        base = mesh_shape if mesh_shape else (16, 16)
+        mesh_shape = (base[0], args.tp)
 
     build_kw = dict(zero=args.zero, recompute=args.recompute,
                     attn_impl=args.attn, n_micro=args.n_micro,

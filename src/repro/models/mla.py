@@ -40,19 +40,28 @@ def mla_init(key: jax.Array, spec: ModelSpec, dtype=jnp.bfloat16) -> Params:
 
 
 def _towers(p: Params, spec: ModelSpec, x: jnp.ndarray,
-            positions: jnp.ndarray):
-    """Shared by train fwd and prefill: returns q (nope‖rope), k (nope‖rope), v."""
+            positions: jnp.ndarray, tpf=None):
+    """Shared by train fwd and prefill: returns q (nope‖rope), k (nope‖rope), v.
+
+    ``tpf`` (optional) is the executor's tensor-parallel entry operator
+    (``parallel.tp.copy_to_tp``): the down-projections W^DQ/W^DKV/W^KR are
+    replicated across TP (paper §3.2) and computed redundantly on every
+    shard, so the compressed latents — the points where the replicated
+    towers fan out into head-sharded up-projections — are where the
+    backward pass must all-reduce.
+    """
     m = spec.mla
     b, s, _ = x.shape
-    cq = rmsnorm(p["q_norm"], x @ p["w_dq"], spec.norm_eps)
+    tpf = tpf if tpf is not None else (lambda t: t)
+    cq = tpf(rmsnorm(p["q_norm"], x @ p["w_dq"], spec.norm_eps))
     q_nope = (cq @ p["w_uq"]).reshape(b, s, spec.n_h, m.d_h)
     q_rope = apply_rope((cq @ p["w_qr"]).reshape(b, s, spec.n_h, m.d_hr),
                         positions, spec.rope_theta)
-    c_kv = rmsnorm(p["kv_norm"], x @ p["w_dkv"], spec.norm_eps)
+    c_kv = tpf(rmsnorm(p["kv_norm"], x @ p["w_dkv"], spec.norm_eps))
     k_nope = (c_kv @ p["w_uk"]).reshape(b, s, spec.n_h, m.d_h)
     k_rope = apply_rope((x @ p["w_kr"]).reshape(b, s, 1, m.d_hr),
                         positions, spec.rope_theta)
-    k_rope = jnp.broadcast_to(k_rope, (b, s, spec.n_h, m.d_hr))
+    k_rope = jnp.broadcast_to(tpf(k_rope), (b, s, spec.n_h, m.d_hr))
     v = (c_kv @ p["w_uv"]).reshape(b, s, spec.n_h, m.d_v)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     k = jnp.concatenate([k_nope, k_rope], axis=-1)
@@ -60,10 +69,11 @@ def _towers(p: Params, spec: ModelSpec, x: jnp.ndarray,
 
 
 def mla_forward(p: Params, spec: ModelSpec, x: jnp.ndarray,
-                positions: jnp.ndarray, *, impl: str = "naive") -> jnp.ndarray:
+                positions: jnp.ndarray, *, impl: str = "naive",
+                tpf=None) -> jnp.ndarray:
     m = spec.mla
     b, s, _ = x.shape
-    q, k, v = _towers(p, spec, x, positions)
+    q, k, v = _towers(p, spec, x, positions, tpf)
     scale = (m.d_h + m.d_hr) ** -0.5
     if impl == "pallas":
         from repro.kernels import ops as K

@@ -67,11 +67,20 @@ def _positions_in_expert(eids: jnp.ndarray, n_expert: int
 
 def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
                 capacity_factor: float = 1.25,
-                router_impl: str = "softmax") -> MoEOutput:
+                router_impl: str = "softmax",
+                tp_f=None, tp_g=None) -> MoEOutput:
     """x: (b, s, h) -> (b, s, h).
 
     DeepSeek-v3 uses sigmoid scoring + top-k renormalisation; classic top-k
     softmax also supported (OLMoE/Qwen3 use softmax).
+
+    ``tp_f``/``tp_g`` (optional) are the pipeline executor's manual
+    tensor-parallel entry/exit operators (``parallel.tp``): expert weights
+    arrive sharded on their *ff* dim (ETP — every shard holds all experts,
+    1/tp of each expert's hidden), the router/dispatch runs replicated and
+    bit-identical on every shard, ``tp_f`` wraps the dispatch buffer and
+    shared-expert input, ``tp_g`` sums the partial expert outputs.  The
+    returned ``y`` and ``aux_loss`` are then replicated across TP.
     """
     e = spec.moe
     b, s, h = x.shape
@@ -105,11 +114,15 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
     # dispatch: scatter kept tokens into the (E, C, h) buffer (EP-sharded)
     src = jnp.repeat(xt, K, axis=0) * keep[:, None].astype(x.dtype)
     buf = jnp.zeros((E, C, h), x.dtype).at[flat_eids, pos_c].add(src)
+    if tp_f is not None:
+        buf = tp_f(buf)
 
     # expert FFN (SwiGLU), batched over the expert dim
     a = jax.nn.silu(jnp.einsum("ech,ehf->ecf", buf, p["we_gate"]))
     a = a * jnp.einsum("ech,ehf->ecf", buf, p["we_up"])
     out_buf = jnp.einsum("ecf,efh->ech", a, p["we_down"])
+    if tp_g is not None:
+        out_buf = tp_g(out_buf)
 
     # combine: gather each assignment's expert output, weight, sum over K
     y_pairs = out_buf[flat_eids, pos_c] * (gates.reshape(T * K)
@@ -118,7 +131,9 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
     y = y_pairs.reshape(T, K, h).sum(axis=1)
 
     if e.n_shared:
-        y = y + mlp_apply(p["shared"], spec, xt)
+        xs = tp_f(xt) if tp_f is not None else xt
+        ys = mlp_apply(p["shared"], spec, xs)
+        y = y + (tp_g(ys) if tp_g is not None else ys)
     return MoEOutput(y=y.reshape(b, s, h), aux_loss=aux, router_probs=probs)
 
 

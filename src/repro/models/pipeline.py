@@ -396,19 +396,34 @@ def unstack_pipeline_grads(gstack: PyTree, params: PyTree, spec: ModelSpec,
 
 def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
                 x: jnp.ndarray, positions: jnp.ndarray, mask: jnp.ndarray,
-                moe_flag: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                moe_flag: jnp.ndarray, tp_axis: Optional[str] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One union layer slot.  ``mask`` (scalar f32) turns pad slots into the
     identity; ``moe_flag`` selects the MoE vs dense-MLP branch when the model
-    mixes kinds (only the selected branch receives gradient)."""
+    mixes kinds (only the selected branch receives gradient).
+
+    ``tp_axis`` (the executor's 'model' mesh axis) switches on manual
+    Megatron TP: ``spec`` must then be the TP-local view
+    (``parallel.tp.tp_local_spec``) matching 'model'-sharded weights, and
+    every block is bracketed by the f/g operators of ``parallel.tp`` —
+    ``copy_to_tp`` where the replicated residual enters sharded compute,
+    ``reduce_from_tp`` where partial block outputs rejoin it."""
+    from repro.parallel.tp import copy_to_tp, reduce_from_tp
     gemma = spec.name.startswith("gemma")
     window = spec.sliding_window
+    tpf = (lambda t: copy_to_tp(t, tp_axis)) if tp_axis else (lambda t: t)
+    tpg = (lambda t: reduce_from_tp(t, tp_axis)) if tp_axis else (lambda t: t)
     h1 = rmsnorm(p["ln1"], x, spec.norm_eps, gemma_style=gemma)
     if spec.attention == AttentionKind.MLA:
+        # MLA's replicated down-projections run redundantly on every shard;
+        # the f operator sits on the compressed latents inside _towers
         mix = M.mla_forward(p["attn"], spec, h1, positions,
-                            impl=opts.attn_impl)
+                            impl=opts.attn_impl,
+                            tpf=tpf if tp_axis else None)
     else:
-        mix = A.gqa_forward(p["attn"], spec, h1, positions,
+        mix = A.gqa_forward(p["attn"], spec, tpf(h1), positions,
                             impl=opts.attn_impl, window=window)
+    mix = tpg(mix)
     x = x + mix * mask.astype(x.dtype)
     h2 = rmsnorm(p["ln2"], x, spec.norm_eps, gemma_style=gemma)
     aux = jnp.zeros((), jnp.float32)
@@ -416,14 +431,16 @@ def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
     if has_moe:
         out = moe_forward(p["moe"], spec, h2,
                           capacity_factor=opts.capacity_factor,
-                          router_impl=opts.router_impl)
+                          router_impl=opts.router_impl,
+                          tp_f=tpf if tp_axis else None,
+                          tp_g=tpg if tp_axis else None)
         sel = moe_flag.astype(x.dtype)
         delta = out.y * sel
         if has_mlp:
-            delta = delta + mlp_apply(p["mlp"], spec, h2) * (1 - sel)
+            delta = delta + tpg(mlp_apply(p["mlp"], spec, tpf(h2))) * (1 - sel)
         aux = out.aux_loss * moe_flag * mask
     elif has_mlp:
-        delta = mlp_apply(p["mlp"], spec, h2)
+        delta = tpg(mlp_apply(p["mlp"], spec, tpf(h2)))
     else:
         delta = jnp.zeros_like(x)
     x = x + delta * mask.astype(x.dtype)
@@ -433,15 +450,17 @@ def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
 def pipeline_stage_apply(layers_p: PyTree, spec: ModelSpec,
                          opts: ModelOptions, x: jnp.ndarray,
                          positions: jnp.ndarray, mask: jnp.ndarray,
-                         moe_flag: jnp.ndarray
+                         moe_flag: jnp.ndarray,
+                         tp_axis: Optional[str] = None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Scan this stage's l_max union slots.  ``layers_p`` leaves are
-    (l_max, ...); ``mask``/``moe_flag`` are (l_max,)."""
+    (l_max, ...); ``mask``/``moe_flag`` are (l_max,).  With ``tp_axis`` the
+    slots run manual TP (see ``_slot_apply``)."""
 
     def body(carry, inp):
         xc, aux = carry
         p_slot, m, f = inp
-        xc, a = _slot_apply(p_slot, spec, opts, xc, positions, m, f)
+        xc, a = _slot_apply(p_slot, spec, opts, xc, positions, m, f, tp_axis)
         return (xc, aux + a), None
 
     body = _remat(body, opts.recompute)

@@ -56,11 +56,11 @@ def _leaf_axes(path: Tuple[str, ...], ndim: int) -> Tuple[Optional[str], ...]:
     parents = set(keys[:-1])
 
     if "embed" in parents:
-        return ("vocab", "embed")
-    if "head" in parents:
-        return ("embed", "vocab")
-    if name == "scale":                        # any norm
-        base: Tuple[Optional[str], ...] = ("embed",)
+        base: Tuple[Optional[str], ...] = ("vocab", "embed")
+    elif "head" in parents:
+        base = ("embed", "vocab")
+    elif name == "scale":                      # any norm
+        base = ("embed",)
     elif "moe" in parents and name in _MOE_RULES:
         base = _MOE_RULES[name]
     elif ("shared" in parents or "mlp" in parents) and name in _MLP_RULES:

@@ -1,0 +1,179 @@
+"""Manual tensor-parallel collectives for the pipeline executor.
+
+The 3D executor (``train.pipeline_loop``) runs fully-manual ``shard_map``
+over ('pipe', 'data', 'model'): nested GSPMD (``shard_map(auto=...)``) is
+not usable on the jax versions this repo targets (the SPMD partitioner
+rejects ``ppermute``/``with_sharding_constraint`` inside a partially-manual
+body), so TP inside a rank is the classic Megatron construction with the
+paired f/g operators spelled out:
+
+* :func:`copy_to_tp`   — Megatron's *f*: identity forward, ``psum`` backward.
+  Placed where a replicated activation *enters* a TP-sharded region (QKV
+  input, MLP input, the logit projection input, MLA's compressed latents).
+* :func:`reduce_from_tp` — Megatron's *g*: ``psum`` forward, identity
+  backward.  Placed where partial results *leave* a TP region (attention
+  out-projection, MLP/expert down-projection, vocab-parallel reductions).
+
+Why not plain ``jax.lax.psum``: under ``shard_map(check_rep=False)`` jax
+cannot prove replication, so it transposes ``psum`` to another ``psum`` —
+weight gradients come out ``tp``× too large.  The custom-vjp pairs encode
+the replication facts we know by construction.  With f/g placed at every
+replicated↔sharded boundary, *every* cotangent in the backward pass is the
+exact global cotangent, so all weight gradients (sharded and replicated
+leaves alike) are exact locally and need no further model-axis reduction.
+
+Also here: the TP-local ``ModelSpec`` view (:func:`tp_local_spec`) the
+executor feeds the unchanged model code (head/ff counts divided by tp so
+reshapes line up with weight shards), the loud divisibility guard
+(:func:`check_tp_supported`), and the vocab-parallel embedding / softmax
+cross-entropy (:func:`embed_tp` / :func:`ce_sum_tp`) used by the first /
+last model chunk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.notation import AttentionKind, ModelSpec, tp_violations
+
+TP_AXIS = "model"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def copy_to_tp(x: jnp.ndarray, axis: str = TP_AXIS) -> jnp.ndarray:
+    """Identity forward; all-reduce (psum over ``axis``) backward."""
+    return x
+
+
+def _copy_fwd(x, axis):
+    return x, None
+
+
+def _copy_bwd(axis, _, ct):
+    return (jax.lax.psum(ct, axis),)
+
+
+copy_to_tp.defvjp(_copy_fwd, _copy_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def reduce_from_tp(x: jnp.ndarray, axis: str = TP_AXIS) -> jnp.ndarray:
+    """All-reduce (psum over ``axis``) forward; identity backward."""
+    return jax.lax.psum(x, axis)
+
+
+def _reduce_fwd(x, axis):
+    return jax.lax.psum(x, axis), None
+
+
+def _reduce_bwd(axis, _, ct):
+    return (ct,)
+
+
+reduce_from_tp.defvjp(_reduce_fwd, _reduce_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _pmax_stopgrad(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """Cross-shard max with zero gradient — the log-sum-exp stabilizer
+    (``pmax`` has no jax differentiation rule; the max-shift term cancels
+    analytically, so a zero cotangent is exact)."""
+    return jax.lax.pmax(x, axis)
+
+
+def _pmax_fwd(x, axis):
+    return jax.lax.pmax(x, axis), None
+
+
+def _pmax_bwd(axis, _, ct):
+    return (jnp.zeros_like(ct),)
+
+
+_pmax_stopgrad.defvjp(_pmax_fwd, _pmax_bwd)
+
+
+# ---------------------------------------------------------------------------
+# TP-local model view + loud divisibility guard
+# ---------------------------------------------------------------------------
+
+def check_tp_supported(spec: ModelSpec, tp: int) -> None:
+    """Executor guard: manual TP assumes every sharded dim divides exactly
+    (no silent replicate-fallback — the manual psums would double-count)."""
+    bad = tp_violations(spec, tp)
+    if bad:
+        raise ValueError(
+            f"{spec.name}: tp={tp} does not divide {', '.join(bad)}; the "
+            f"pipeline executor's manual TP requires exact divisibility "
+            f"(the GSPMD dry-run path replicates indivisible dims instead)")
+
+
+def tp_local_spec(spec: ModelSpec, tp: int) -> ModelSpec:
+    """The per-shard view of ``spec`` under TP degree ``tp``: head and ff
+    counts divided so the unchanged model code's reshapes line up with the
+    'model'-axis weight shards.  MoE experts shard their *ff* dim (the
+    paper's ETP knob — every shard holds all experts, 1/tp of each), so the
+    router and dispatch stay replicated and deterministic across shards."""
+    if tp <= 1:
+        return spec
+    check_tp_supported(spec, tp)
+    kw = dict(n_h=spec.n_h // tp)
+    if spec.attention not in (AttentionKind.NONE, AttentionKind.MLA):
+        kw["n_kv"] = spec.n_kv // tp
+    if spec.h_ff:
+        kw["h_ff"] = spec.h_ff // tp
+    if spec.is_moe:
+        kw["moe"] = dataclasses.replace(
+            spec.moe, d_ff_expert=spec.moe.d_ff_expert // tp)
+    return dataclasses.replace(spec, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel embedding and cross-entropy (rows/columns on the TP axis)
+# ---------------------------------------------------------------------------
+
+def embed_tp(w_local: jnp.ndarray, tokens: jnp.ndarray, *,
+             axis: str = TP_AXIS, scale_by_dim: bool = False,
+             h: int = 0) -> jnp.ndarray:
+    """Row-sharded embedding lookup: each shard gathers the rows it owns
+    (shard i holds vocab rows [i·v_loc, (i+1)·v_loc)), zeros the rest, and
+    the partial results are summed.  Backward scatters the exact cotangent
+    into the owning shard's rows only."""
+    v_loc = w_local.shape[0]
+    off = jax.lax.axis_index(axis) * v_loc
+    idx = tokens - off
+    ok = (idx >= 0) & (idx < v_loc)
+    x = jnp.take(w_local, jnp.clip(idx, 0, v_loc - 1), axis=0)
+    x = jnp.where(ok[..., None], x, jnp.zeros((), x.dtype))
+    x = reduce_from_tp(x, axis)
+    if scale_by_dim:
+        x = x * jnp.asarray(h ** 0.5, x.dtype)
+    return x
+
+
+def ce_sum_tp(logits_local: jnp.ndarray, tokens: jnp.ndarray,
+              mask: jnp.ndarray, *, axis: str = TP_AXIS) -> jnp.ndarray:
+    """Unnormalized next-token CE sum from column-sharded logits
+    (``logits_local``: (b, s, v_loc) = shard's contiguous vocab columns).
+
+    Distributed log-sum-exp: global max via ``pmax`` (stop-gradient, the
+    standard stabilizer), exp-sums and the gold logit assembled with
+    :func:`reduce_from_tp` so the backward pass hands each shard the exact
+    cotangent for its local columns.  Matches the pp=1 ``_ce_sum`` to fp32
+    round-off."""
+    targets = tokens[:, 1:]
+    lg = logits_local[:, :-1].astype(jnp.float32)
+    v_loc = lg.shape[-1]
+    gmax = _pmax_stopgrad(jnp.max(lg, axis=-1), axis)
+    sumexp = reduce_from_tp(jnp.sum(jnp.exp(lg - gmax[..., None]), axis=-1),
+                            axis)
+    logz = jnp.log(sumexp) + gmax
+    idx = targets - jax.lax.axis_index(axis) * v_loc
+    ok = (idx >= 0) & (idx < v_loc)
+    gold_l = jnp.take_along_axis(
+        lg, jnp.clip(idx, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+    gold = reduce_from_tp(jnp.where(ok, gold_l, 0.0), axis)
+    return jnp.sum((logz - gold) * mask)

@@ -11,13 +11,20 @@ virtual stages, or the ``dualpipe`` bidirectional schedule — over the
   families; see ``models.pipeline.check_pipeline_supported``),
 * ``cfg``: ``TrainConfig`` — ``cfg.n_micro`` microbatches per step
   (``interleaved`` requires ``n_micro % pp == 0``),
-* ``mesh``: axes ``('pipe',)`` or ``('pipe', 'data')``
-  (``launch.mesh.make_production_mesh(pp=...)``); pp = mesh.shape['pipe'],
-* ``schedule``/``n_chunks``: schedule name and virtual stages per rank.
+* ``mesh``: any of ``('pipe',)``, ``('pipe', 'data')`` or the full 3D
+  ``('pipe', 'data', 'model')`` (``launch.mesh.make_production_mesh(pp=…)``);
+  pp = mesh.shape['pipe'], tp = mesh.shape.get('model', 1),
+* ``schedule``/``n_chunks``: schedule name and virtual stages per rank,
+* ``zero``: ``ZeROStage`` — shard optimizer state (``os``), + gradients
+  (``os+g``) across each stage's DP group (the 'data'(+'pod') axes).
 
-One SPMD program (``shard_map``): every device holds one rank's slice of
-the chunk-stacked parameters (``models.pipeline.stack_pipeline_params``,
-leaves ``(pp, n_chunks, l_max, ...)``) and runs the same tick loop; rank
+One SPMD program (``shard_map``, fully manual over every mesh axis): every
+device holds one rank's slice of the chunk-stacked parameters
+(``models.pipeline.stack_pipeline_params``, leaves
+``(pp, n_chunks, l_max, ...)``) — and, with a 'model' axis, its 1/tp TP
+shard of them (``parallel.sharding.pipeline_stage_specs``: Megatron
+head/column splits for attention and MLPs, expert-ff (ETP) splits for MoE,
+vocab rows/columns for embedding/head) — and runs the same tick loop; rank
 identity is ``lax.axis_index('pipe')``.  What happens at tick t — forward
 or backward of which microbatch on which local chunk, and where boundary
 tensors travel — is read from the schedule's static tables
@@ -36,17 +43,45 @@ chunk-granular recompute, the standard JAX pipeline construction.  Under
 ``dualpipe`` every model chunk lives on two ranks (the schedule's 2×
 parameter cost); ``unstack_pipeline_grads`` sums both copies' gradients.
 
+Tensor parallelism runs *inside* each rank's chunk forward/backward.
+Nested GSPMD is not viable on the targeted jax versions (the partitioner
+rejects ``ppermute`` under a partially-auto ``shard_map``), so TP is the
+explicit Megatron construction: the chunk forward sees the TP-local spec
+(``parallel.tp.tp_local_spec`` — n_h/n_kv/h_ff/d_ff_expert divided by tp)
+and the paired f/g operators of ``parallel.tp`` bracket every sharded
+region (``copy_to_tp``: identity-fwd/psum-bwd where the replicated
+residual enters sharded compute; ``reduce_from_tp``: psum-fwd/identity-bwd
+where partial outputs leave it).  Embedding and head are vocab-parallel
+(``embed_tp`` masked-gather rows; ``ce_sum_tp`` distributed log-sum-exp
+over column-sharded logits).  With f/g at every boundary, every cotangent
+in the manual backward is the exact global cotangent — so local weight
+gradients (sharded and replicated leaves alike) are exact with no extra
+model-axis reduction, and the boundary ``ppermute`` payloads stay
+replicated across 'model', composing with TP untouched.
+
+``zero`` applies DeepSpeed-style state partitioning at the executor level
+(previously dry-run-only): {master, m, v} — and for ``os+g`` the fp32
+gradient buffers — carry ``with_sharding_constraint`` s from
+``parallel.sharding.state_shardings``/``grad_shardings``, which extend
+each leaf's §3 TP spec with the data(+pod) axes; since PP groups are
+data-major, those axes are exactly the per-stage DP group, so each DP
+shard holds 1/dp of its stage's optimizer bytes and XLA reduce-scatters
+grads into the sharded AdamW update.
+
 Semantics match ``train.loop.make_train_step``: fp32 gradient accumulation
 across microbatches, mean over n_micro, one AdamW update, loss metric
 ce + 0.01·aux per microbatch.  ``TrainState`` keeps the pp=1 layout — grads
 are unstacked back before the update — so optimizer, checkpointing and the
 pp=1 path are untouched.  All three schedules reproduce the pp=1 step's
-loss and post-update params to bf16-accumulation tolerance
-(``tests/test_pipeline_1f1b.py``).
+loss and post-update params to bf16-accumulation tolerance at
+pp∈{2,4} × tp∈{1,2} × dp∈{1,2} (``tests/test_pipeline_1f1b.py``,
+``tests/test_pipeline_3d.py``).
 
-Scope: mesh axes ('pipe',) or ('pipe', 'data'); TP inside a rank is not
-executed here (the per-rank dry-run programs cover TP via GSPMD).  MoE aux
-uses the scatter dispatch and is pmean'd across data shards.
+Scope notes: sequence parallelism is not executed (activations are
+replicated across 'model'; the analytic ``sp`` knob is estimator-only),
+and MoE dispatch is ETP-style (all experts on every shard, expert-ff
+sharded) — EP placement remains GSPMD/dry-run territory.  MoE aux uses the
+scatter dispatch and is pmean'd across data shards.
 """
 
 from __future__ import annotations
@@ -57,6 +92,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.parallel_config import ZeROStage
 from repro.models.layers import embed_apply, rmsnorm
 from repro.models.model import Model
 from repro.models.pipeline import (check_pipeline_supported,
@@ -65,11 +101,20 @@ from repro.models.pipeline import (check_pipeline_supported,
                                    unstack_pipeline_grads)
 from repro.optim.adamw import TrainState, adamw_update
 from repro.parallel.compat import shard_map
-from repro.parallel.sharding import pipeline_stage_specs
+from repro.parallel.sharding import (grad_shardings, pipeline_stage_specs,
+                                     state_shardings)
+from repro.parallel.tp import (ce_sum_tp, check_tp_supported, copy_to_tp,
+                               embed_tp, tp_local_spec)
 from repro.train.loop import TrainConfig, _split_micro
 from repro.train.schedules import build_exec_tables, make_schedule
 
 PyTree = Any
+
+# Executor TP rules: like the §3 defaults, but experts shard their *ff* dim
+# (ETP) instead of the expert dim (EP) — the router and capacity dispatch
+# then run replicated and bit-identical on every 'model' shard, which the
+# manual-collective construction requires (see parallel.tp).
+_EXEC_TP_RULES = {"expert": None, "expert_ff": "model"}
 
 
 def _ce_mask(mask: Optional[jnp.ndarray], tokens: jnp.ndarray) -> jnp.ndarray:
@@ -96,19 +141,30 @@ def _dyn(a: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
 
 
 def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
-                             schedule: str = "1f1b", n_chunks: int = 1):
+                             schedule: str = "1f1b", n_chunks: int = 1,
+                             zero: ZeROStage = ZeROStage.NONE):
     """Build the jit-able schedule-driven pipeline step for ``mesh`` (axes
-    ('pipe'[, 'data'])); pp = mesh.shape['pipe'].  Same contract as
-    ``make_train_step``."""
+    ('pipe'[, 'data'][, 'model'])); pp = mesh.shape['pipe'], TP degree =
+    mesh.shape['model'].  Same contract as ``make_train_step``.  ``zero``
+    shards optimizer state (and grads for ``os+g``) across the per-stage DP
+    group via sharding constraints; callers keeping state resident across
+    steps should ``device_put`` it with
+    ``parallel.sharding.state_shardings(abstract_state, mesh, zero,
+    rules=pipeline_loop._EXEC_TP_RULES)`` — the executor's ETP expert
+    layout (identical to the default rules for non-MoE models)."""
     spec, opts = model.spec, model.opts
     check_pipeline_supported(spec)
     if "pipe" not in mesh.axis_names:
         raise ValueError("pipeline step needs a 'pipe' mesh axis "
                          "(launch.mesh.make_production_mesh(pp=...))")
-    if mesh.shape.get("model", 1) != 1:
+    tp = mesh.shape.get("model", 1)
+    tp_axis = "model" if tp > 1 else None
+    check_tp_supported(spec, tp)
+    spec_run = tp_local_spec(spec, tp)
+    if zero == ZeROStage.OS_G_PARAMS:
         raise NotImplementedError(
-            "pipeline executor runs TP=1 inside ranks; per-rank TP memory is "
-            "covered by the dry-run's stage programs")
+            "executor ZeRO covers os / os+g; os+g+params (ZeRO-3 parameter "
+            "partitioning) remains dry-run-only")
     S = mesh.shape["pipe"]
     M = cfg.n_micro
     sched = make_schedule(schedule, S, M, n_chunks=n_chunks)
@@ -157,17 +213,28 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             """Uniform per-chunk program: embed (selected when the chunk is
             the first model chunk), the chunk's union slots, head + local CE
             sum (meaningful on the last model chunk, zero-cotangent
-            elsewhere)."""
-            x0 = embed_apply(ps["embed"], tok, scale_by_dim=gemma, h=spec.h)
+            elsewhere).  Under TP the embedding is row-sharded and the
+            logits column-sharded on 'model' (vocab-parallel CE)."""
+            if tp_axis:
+                x0 = embed_tp(ps["embed"]["w"], tok, axis=tp_axis,
+                              scale_by_dim=gemma, h=spec.h)
+            else:
+                x0 = embed_apply(ps["embed"], tok, scale_by_dim=gemma,
+                                 h=spec.h)
             x = jnp.where(first_l[c] > 0.5, x0, x_recv)
             positions = jnp.broadcast_to(jnp.arange(s)[None], (b_loc, s))
-            y, aux = pipeline_stage_apply(pl, spec, opts, x, positions,
-                                          smask[c], sflag[c])
+            y, aux = pipeline_stage_apply(pl, spec_run, opts, x, positions,
+                                          smask[c], sflag[c], tp_axis)
             z = rmsnorm(ps["final_norm"], y, spec.norm_eps, gemma_style=gemma)
             w_out = ps["embed"]["w"].T if spec.tie_embeddings \
                 else ps["head"]["w"]
-            logits = z @ w_out
-            return y, _ce_sum(logits, tok, mm), aux
+            if tp_axis:
+                logits = copy_to_tp(z, tp_axis) @ w_out
+                ce = ce_sum_tp(logits, tok, _ce_mask(mm, tok), axis=tp_axis)
+            else:
+                logits = z @ w_out
+                ce = _ce_sum(logits, tok, mm)
+            return y, ce, aux
 
         def micro_at(arr, m):
             return jax.lax.dynamic_index_in_dim(arr, m, 0, keepdims=False)
@@ -270,6 +337,16 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     for a in data_axes:
         data_size *= mesh.shape[a]
 
+    def _zero_constrain(st: TrainState) -> TrainState:
+        """ZeRO residency: pin {master, m, v} to their per-stage-DP-group
+        shardings (state keeps the pp=1 layout; the 'data'(+'pod') axes of
+        this mesh *are* the within-stage DP group because PP carves the
+        leading 'pipe' axis out of data)."""
+        sh = state_shardings(st, mesh, zero, rules=_EXEC_TP_RULES)
+        wsc = jax.lax.with_sharding_constraint
+        return st._replace(master=wsc(st.master, sh.master),
+                           m=wsc(st.m, sh.m), v=wsc(st.v, sh.v))
+
     def step(state: TrainState, batch: Dict[str, jnp.ndarray]
              ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
         micro = _split_micro(batch, M)
@@ -278,9 +355,12 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             raise ValueError(
                 f"micro-batch size {toks.shape[1]} must divide the data axes "
                 f"(size {data_size})")
+        if zero != ZeROStage.NONE:
+            state = _zero_constrain(state)
         stacked = stack_pipeline_params(state.params, spec, S,
                                         schedule=schedule, n_chunks=V)
-        stage_specs = pipeline_stage_specs(stacked, mesh)
+        stage_specs = pipeline_stage_specs(stacked, mesh,
+                                           rules=_EXEC_TP_RULES)
         dspec = tuple(data_axes) if data_axes else None
         margs = (toks,)
         mspecs = (P(None, dspec, None),)
@@ -302,7 +382,15 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
         grads = unstack_pipeline_grads(g_st, state.params, spec, S,
                                        schedule=schedule, n_chunks=V)
         grads = jax.tree.map(lambda a: a / M, grads)
+        if zero in (ZeROStage.OS_G, ZeROStage.OS_G_PARAMS):
+            # ZeRO-2: reduce-scatter the fp32 accumulation buffers onto the
+            # per-stage DP group before the (sharded) optimizer update
+            grads = jax.lax.with_sharding_constraint(
+                grads, grad_shardings(state.params, mesh, zero,
+                                      rules=_EXEC_TP_RULES))
         new_state, opt_metrics = adamw_update(state, grads, cfg.adamw)
+        if zero != ZeROStage.NONE:
+            new_state = _zero_constrain(new_state)
         metrics = {"loss": loss_sum / M, **opt_metrics}
         return new_state, metrics
 

@@ -1,0 +1,111 @@
+"""TP divisibility guards (analytic + executor-facing) and the planner's
+``runnable`` marking."""
+
+import dataclasses
+
+import pytest
+
+from repro.configs import get_spec
+from repro.core import (ParallelConfig, RecomputePolicy, ZeROStage,
+                        executor_runnable, plan, tp_violations)
+from repro.core.activations import (dense_mlp_activation_bytes,
+                                    gqa_activation_bytes)
+from repro.core.parallel_config import RecomputePolicy as RP
+
+
+def _cfg(**kw):
+    base = dict(dp=4, tp=2, pp=1, ep=1, etp=1, sp=True,
+                zero=ZeROStage.OS_G, recompute=RecomputePolicy.NONE,
+                micro_batch=1, seq_len=4096)
+    base.update(kw)
+    return ParallelConfig(**base)
+
+
+def test_tp_violations_lists_offending_dims():
+    qwen = get_spec("qwen2-1.5b")
+    assert tp_violations(qwen, 2) == []
+    bad = tp_violations(qwen, 5)              # n_h=12, n_kv=2, h_ff=8960
+    assert any("n_h" in b for b in bad)
+    assert any("n_kv" in b for b in bad)
+    hymba = get_spec("hymba-1.5b")            # n_h=25
+    assert any("n_h" in b for b in tp_violations(hymba, 2))
+
+
+def test_indivisible_tp_warns_and_degrades():
+    """hymba's n_h=25 at tp=2 previously floor-divided every term; now the
+    guard warns loudly and degrades only what the runtime cannot shard:
+    head-indexed score tensors fall to gcd(25, 2)=1 (replicated) and the
+    n_kv=5 K/V to gcd(5, 2)=1, while the fused 25·64 qkv columns still
+    split 2 ways."""
+    hymba = get_spec("hymba-1.5b")
+    b, s, d = 1, 1024, hymba.d_head
+    with pytest.warns(RuntimeWarning, match="n_h=25"):
+        got = gqa_activation_bytes(hymba, b, s, tp=2, sp=1, cp=1,
+                                   recompute=RP.NONE)
+    expect = (3 * b * s * hymba.h
+              + 2 * 2 * b * s * hymba.n_h * d // 2      # Q + ctx, fused /2
+              + 2 * 2 * b * s * hymba.n_kv * d          # K,V gcd(5,2)=1
+              + 5 * b * hymba.n_h * s * s)              # scores gcd(25,2)=1
+    assert got == expect
+    tp1 = gqa_activation_bytes(hymba, b, s, tp=1, sp=1, cp=1,
+                               recompute=RP.NONE)
+    assert got < tp1                # fused splits still help ...
+    assert got > tp1 // 2           # ... but scores no longer silently //2
+    with pytest.warns(RuntimeWarning, match="h_ff"):
+        dense_mlp_activation_bytes(
+            dataclasses.replace(get_spec("qwen2-1.5b"), h_ff=8961),
+            1, 1024, tp=2, sp=1, cp=1, recompute=RP.NONE)
+
+
+def test_kv_clamp_in_activation_bytes():
+    """K/V activations shard at most n_kv ways: qwen2 (n_kv=2) at tp=4
+    must count K,V divided by 2, not 4."""
+    spec = get_spec("qwen2-1.5b")             # n_h=12 % 4 = 0, n_kv=2
+    b, s, d = 2, 1024, spec.d_head
+    got = gqa_activation_bytes(spec, b, s, tp=4, sp=1, cp=1,
+                               recompute=RP.NONE)
+    kv_term = 2 * 2 * b * s * spec.n_kv * d // 2       # clamped at n_kv
+    kv_wrong = 2 * 2 * b * s * spec.n_kv * d // 4
+    scores = 5 * b * spec.n_h * s * s // 4
+    q_ctx = 2 * 2 * b * s * spec.n_h * d // 4
+    fixed = 3 * b * s * spec.h                          # sp=1 terms
+    assert got == fixed + q_ctx + kv_term + scores
+    assert got != fixed + q_ctx + kv_wrong + scores
+
+
+def test_executor_runnable_marking():
+    qwen = get_spec("qwen2-1.5b")
+    ok, why = executor_runnable(qwen, _cfg(tp=2, zero=ZeROStage.OS))
+    assert ok, why
+    ok, why = executor_runnable(qwen, _cfg(tp=2, zero=ZeROStage.OS_G_PARAMS))
+    assert not ok and "ZeRO-3" in why
+    ok, why = executor_runnable(get_spec("rwkv6-1.6b"), _cfg(tp=1))
+    assert not ok and "SSM" in why
+    ds = get_spec("deepseek-v3")
+    ok, why = executor_runnable(ds, _cfg(tp=2, ep=2))
+    assert not ok and "EP" in why
+    ok, why = executor_runnable(ds, _cfg(tp=2, ep=1))
+    assert ok, why
+    hymba = get_spec("hymba-1.5b")
+    ok, why = executor_runnable(
+        dataclasses.replace(hymba, ssm=None), _cfg(tp=2))
+    assert not ok and "n_h" in why
+
+
+def test_plan_marks_tp_and_zero_configs_runnable():
+    """Acceptance: plan() surfaces tp>1 / ZeRO-sharded configs the 3D
+    executor can actually run, with runnable=True."""
+    spec = get_spec("qwen2-1.5b")
+    entries = plan(spec, world_size=8, hbm_bytes=96 * 2 ** 30,
+                   seq_len=4096, top_k=50, max_tp=4)
+    runnable_tp = [e for e in entries
+                   if e.runnable and e.cfg.tp > 1
+                   and e.cfg.zero != ZeROStage.NONE]
+    assert runnable_tp, "no runnable tp>1 + ZeRO configs surfaced"
+    for e in entries:
+        if e.cfg.zero == ZeROStage.OS_G_PARAMS:
+            assert not e.runnable and e.why_not_runnable
+    # an SSM family is never runnable by the pipeline executor
+    entries = plan(get_spec("rwkv6-1.6b"), world_size=8,
+                   hbm_bytes=96 * 2 ** 30, seq_len=4096, top_k=10)
+    assert entries and all(not e.runnable for e in entries)
