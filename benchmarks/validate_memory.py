@@ -137,9 +137,30 @@ def _parse_mesh_tag(tag: str):
     return pods, data, model
 
 
+def _parse_sp_tag(rec: Dict[str, Any], path: Optional[str] = None) -> int:
+    """SP degree of a ``--pp`` artifact: the explicit ``sp`` field on new
+    records, else the ``__sp<N>`` tag component, else the legacy default —
+    older artifacts were analysed with ``sp=True`` hard-coded, i.e.
+    sp == tp (the mesh tag's model axis) — so their rows keep the divisor
+    their analytic columns actually used."""
+    if "sp" in rec:
+        return int(rec["sp"])
+    if path:
+        import re
+        m = re.search(r"__sp(\d+)", os.path.basename(path))
+        if m:
+            return int(m.group(1))
+    if "tp" in rec:
+        return int(rec["tp"])
+    try:
+        return _parse_mesh_tag(rec["mesh"])[2]
+    except Exception:
+        return 1     # unparseable mesh tag: claim no divisor, don't fabricate
+
+
 def validate_pp(arch: str, shape: str, pp: int,
                 mesh_tag: str = "pod16x16", schedule: str = "1f1b",
-                n_chunks: int = 1, zero: str = "os+g",
+                n_chunks: int = 1, zero: str = "os+g", sp: int = 1,
                 tag_suffix: str = "") -> Optional[Dict[str, Any]]:
     """Per-rank validation of a ``dryrun --pp N [--schedule ...]`` artifact:
     XLA's per-rank temp bytes (activations + grads + transients of the rank
@@ -156,26 +177,31 @@ def validate_pp(arch: str, shape: str, pp: int,
     to ~1."""
     sched_tag = "" if schedule == "1f1b" else f"__{schedule}{n_chunks}"
     zero_tag = "" if zero == "os+g" else f"__z{zero.replace('+', '')}"
+    sp_tag = "" if sp == 1 else f"__sp{sp}"
     path = os.path.join(
         DRY, f"{arch}__{shape}__{mesh_tag}__pp{pp}{sched_tag}{zero_tag}"
-             f"{tag_suffix}.json")
+             f"{sp_tag}{tag_suffix}.json")
     if not os.path.exists(path):
         return None
     with open(path) as f:
         rec = json.load(f)
-    return _validate_pp_rec(rec)
+    return _validate_pp_rec(rec, path)
 
 
-def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
+def _validate_pp_rec(rec: Dict[str, Any],
+                     path: Optional[str] = None) -> Dict[str, Any]:
     arch, shape, pp = rec["arch"], rec["shape"], rec["pp"]
     mesh_tag = rec["mesh"]
     schedule = rec.get("schedule", "1f1b")
+    sp = _parse_sp_tag(rec, path)
     if rec.get("status") != "ok":
         return {"arch": arch, "shape": shape, "pp": pp,
                 "schedule": schedule, "n_chunks": rec.get("n_chunks", 1),
-                "tp": rec.get("tp"),
+                "tp": rec.get("tp"), "sp": sp,
                 "zero": rec.get("zero",
                                 rec.get("options", {}).get("zero", "os+g")),
+                "recompute": rec.get("options", {}).get("recompute", "none"),
+                "n_micro": max(rec.get("options", {}).get("n_micro", 1), 1),
                 "status": rec.get("status")}
     stages = rec["stages"]
     temps = [s["memory"].get("temp_size_in_bytes", 0) for s in stages]
@@ -211,8 +237,9 @@ def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
     return {
         "arch": arch, "shape": shape, "pp": pp, "status": "ok",
         "schedule": schedule, "n_chunks": rec.get("n_chunks", 1),
-        "tp": rec.get("tp", model_ax),
+        "tp": rec.get("tp", model_ax), "sp": sp,
         "zero": rec.get("zero", rec.get("options", {}).get("zero", "os+g")),
+        "recompute": rec.get("options", {}).get("recompute", "none"),
         "n_micro": n_micro,
         "stages": [{
             "stage": s["stage"], "layers": s["layers"],
@@ -230,10 +257,13 @@ def _validate_pp_rec(rec: Dict[str, Any]) -> Dict[str, Any]:
 
 def _pp_artifacts() -> List[Dict[str, Any]]:
     """One validation row per distinct (arch, shape, pp, schedule, n_chunks,
-    tp, zero, n_micro) configuration.  Artifacts are deduped on that key —
-    re-runs under a different tag suffix (e.g. legacy ``__nm8`` files next
-    to fresh defaults) previously appended duplicate rows to
-    validation_pp.json; now the newest artifact (mtime) wins."""
+    tp, zero, sp, n_micro) configuration.  Artifacts are deduped on that
+    key — re-runs under a different tag suffix (e.g. legacy ``__nm8`` files
+    next to fresh defaults) previously appended duplicate rows to
+    validation_pp.json; now the newest artifact (mtime) wins.  ``sp`` comes
+    from the record or the ``__sp<N>`` tag (``_parse_sp_tag``), so sp=1 and
+    sp=tp probes of the same mesh coexist as separate rows — the pair the
+    /sp-divisor acceptance check compares."""
     import glob
     by_key: Dict[Any, Dict[str, Any]] = {}
     paths = sorted(glob.glob(os.path.join(DRY, "*__pp*.json")),
@@ -243,10 +273,11 @@ def _pp_artifacts() -> List[Dict[str, Any]]:
             rec = json.load(f)
         if "pp" not in rec:
             continue
-        row = _validate_pp_rec(rec)
+        row = _validate_pp_rec(rec, p)
         key = (row.get("arch"), row.get("shape"), row.get("pp"),
                row.get("schedule"), row.get("n_chunks"), row.get("tp"),
-               row.get("zero"), row.get("n_micro"))
+               row.get("zero"), row.get("sp"), row.get("recompute"),
+               row.get("n_micro"))
         by_key[key] = row            # newest artifact wins
     return [by_key[k] for k in sorted(by_key, key=lambda k: tuple(map(str, k)))]
 
@@ -283,20 +314,22 @@ def main():
         with open(os.path.join(ART, "validation_pp.json"), "w") as f:
             json.dump(pp_rows, f, indent=1)
         print("\n## Per-rank schedule residency (dryrun --pp [--tp --zero "
-              "--schedule]) vs estimate_memory(stage=r, schedule=...)")
-        print("| arch | shape | pp | tp | zero | schedule | n_micro |"
-              " rank0/last XLA (logits-adj) | rank0/last analytic act |"
-              " direction |")
-        print("|---|---|---|---|---|---|---|---|---|---|")
+              "--sp --schedule]) vs estimate_memory(stage=r, schedule=...)")
+        print("| arch | shape | pp | tp | zero | sp | ac | schedule |"
+              " n_micro | rank0/last XLA (logits-adj) |"
+              " rank0/last analytic act | direction |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|---|")
         for r in pp_rows:
             if r.get("status") != "ok":
                 print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
                       f" {r.get('tp', '-')} | {r.get('zero', '-')} |"
+                      f" {r.get('sp', '-')} | {r.get('recompute', '-')} |"
                       f" {r.get('schedule', '1f1b')} | - | - | - |"
                       f" {r.get('status')} |")
                 continue
             print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
-                  f" {r['tp']} | {r['zero']} |"
+                  f" {r['tp']} | {r['zero']} | {r['sp']} |"
+                  f" {r['recompute']} |"
                   f" {r['schedule']} | {r['n_micro']} |"
                   f" {r['measured_ratio_stage0_over_last']:.2f} |"
                   f" {r['analytic_ratio_stage0_over_last']:.2f} |"

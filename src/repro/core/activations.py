@@ -45,6 +45,27 @@ def _shard_or_warn(dim: int, tp: int, what: str) -> int:
     return 1
 
 
+def _seq_shard_or_warn(s: int, sp: int, what: str = "s") -> int:
+    """Effective SP divisor of a *sequence-resident* tensor (the residual
+    stream, norm inputs, boundary activations outside the TP regions):
+    ``sp`` when it divides the (CP-local) sequence exactly, else 1 — the
+    tensor stays SP-replicated — with a loud warning.  Before this guard
+    the formulas silently floor-divided ``// sp``, under-counting
+    indivisible sequence lengths; the executor's hard check is
+    ``parallel.tp.check_sp_supported`` via ``notation.tp_violations(...,
+    sp=..., seq_len=...)``."""
+    if sp <= 1:
+        return 1
+    if s % sp == 0:
+        return sp
+    warnings.warn(
+        f"sp={sp} does not divide {what}={s}; modeling sequence-resident "
+        f"tensors as SP-replicated (the executor rejects this combo "
+        f"outright — parallel.tp.check_sp_supported)",
+        RuntimeWarning, stacklevel=3)
+    return 1
+
+
 def _head_shard_or_warn(n_heads: int, tp: int, what: str) -> int:
     """Effective TP divisor of a *head-count*-sharded tensor (the s²
     score/softmax buffers, laid out (b, n_h, s, s)): heads split evenly at
@@ -94,6 +115,7 @@ def mla_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
         return 0
     m = spec.mla
     s = s // cp
+    sp = _seq_shard_or_warn(s, sp)
     if recompute == RecomputePolicy.FULL:
         return 2 * b * s * spec.h // sp
     tp_c = _shard_or_warn(spec.n_h * m.d_h, tp, "n_h*d_h")
@@ -130,6 +152,7 @@ def moe_activation_bytes(spec: ModelSpec, b: int, s: int, *, sp: int, cp: int,
     """
     e = spec.moe
     s = s // cp
+    sp = _seq_shard_or_warn(s, sp)
     if recompute == RecomputePolicy.FULL:
         return b * s * spec.h + 2 * b * s * e.n_active
     n_local = e.n_routed // _shard_or_warn(e.n_routed, ep, "n_routed (EP)")
@@ -156,6 +179,7 @@ def gqa_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
     """Standard MHA/GQA/MQA attention block, naive-softmax accounting to
     mirror the paper's 5 b n_h s² convention."""
     s = s // cp
+    sp = _seq_shard_or_warn(s, sp)
     if recompute == RecomputePolicy.FULL:
         return 2 * b * s * spec.h // sp
     d = spec.d_head
@@ -185,6 +209,7 @@ def dense_mlp_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int,
                                sp: int, cp: int,
                                recompute: RecomputePolicy) -> int:
     s = s // cp
+    sp = _seq_shard_or_warn(s, sp)
     if recompute == RecomputePolicy.FULL:
         return 2 * b * s * spec.h // sp
     tp = _shard_or_warn(spec.h_ff, tp, "h_ff") if spec.h_ff else 1
@@ -204,6 +229,7 @@ def ssm_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
         return 0
     ss = spec.ssm
     s = s // cp
+    sp = _seq_shard_or_warn(s, sp)
     d = spec.h * ss.ssm_expand
     state = 2 * b * ss.n_ssm_heads * (d // max(ss.n_ssm_heads, 1)) * ss.state_dim
     if recompute == RecomputePolicy.FULL:

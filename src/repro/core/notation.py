@@ -260,14 +260,24 @@ class ModelSpec:
         return self.total_params() - per_layer_delta * self.n_moe_layers()
 
 
-def tp_violations(spec: "ModelSpec", tp: int):
+def tp_violations(spec: "ModelSpec", tp: int, *, sp: int = 1,
+                  seq_len: Optional[int] = None):
     """Dims a TP degree fails to divide exactly, as human-readable strings
     (empty list = cleanly divisible).  Shared by the analytic guard
     (``core.activations``), the planner's runnable marking and the
-    executor's hard check (``parallel.tp.check_tp_supported``)."""
-    if tp <= 1:
-        return []
+    executor's hard checks (``parallel.tp.check_tp_supported`` /
+    ``check_sp_supported``).
+
+    ``sp``/``seq_len`` extend the check to sequence parallelism: SP shards
+    the token dim, so ``seq_len % sp`` must be 0 (the executor's boundary
+    all-gather/reduce-scatter pair has no replicate-fallback; the analytic
+    model falls back to SP-replicated accounting with a RuntimeWarning —
+    ``core.activations._seq_shard_or_warn``)."""
     bad = []
+    if sp > 1 and seq_len is not None and seq_len % sp:
+        bad.append(f"s={seq_len} (sp={sp})")
+    if tp <= 1:
+        return bad
     if spec.attention != AttentionKind.NONE and spec.n_h % tp:
         bad.append(f"n_h={spec.n_h}")
     if spec.attention not in (AttentionKind.NONE, AttentionKind.MLA) \

@@ -63,12 +63,13 @@ def executor_runnable(spec: ModelSpec, cfg: ParallelConfig, *,
 
     The executor runs dense/MoE decoder-only families on
     ('pipe','data','model') meshes with manual TP (exact divisibility
-    required), ZeRO os / os+g via sharding constraints, and ETP-style MoE
-    (all experts on every shard, expert-ff sharded) — so EP placement,
-    ZeRO-3 parameter partitioning, context parallelism and the recurrent /
-    enc-dec / VLM families remain analytic or GSPMD-dry-run territory.
-    Sequence parallelism is an estimator refinement (it changes modeled
-    bytes, not runnability)."""
+    required), Megatron-style sequence parallelism (degree tied to tp —
+    ``make_pipeline_train_step(..., sp=True)``; the seq-sharded boundary
+    requires ``seq_len % tp == 0``), ZeRO os / os+g via sharding
+    constraints, and ETP-style MoE (all experts on every shard, expert-ff
+    sharded) — so EP placement, ZeRO-3 parameter partitioning, context
+    parallelism and the recurrent / enc-dec / VLM families remain analytic
+    or GSPMD-dry-run territory."""
     if spec.ssm is not None:
         return False, "SSM/hybrid family (pipeline runtime unsupported)"
     if spec.encoder is not None:
@@ -77,9 +78,9 @@ def executor_runnable(spec: ModelSpec, cfg: ParallelConfig, *,
         return False, "VLM frontend (pipeline runtime unsupported)"
     if spec.attention == AttentionKind.NONE:
         return False, "attention-free family (pipeline runtime unsupported)"
-    bad = tp_violations(spec, cfg.tp)
+    bad = tp_violations(spec, cfg.tp, sp=cfg.sp_degree, seq_len=cfg.seq_len)
     if bad:
-        return False, f"tp={cfg.tp} does not divide {', '.join(bad)}"
+        return False, f"indivisible parallel degrees: {', '.join(bad)}"
     if cfg.cp > 1:
         return False, "context parallelism not executed"
     if spec.is_moe and cfg.ep > 1:

@@ -23,19 +23,23 @@ combos; ``--zero``, ``--recompute``, ``--attn``, ``--n-micro``,
 ``--capacity-factor``, ``--moe-impl`` configure the lowered program;
 ``--mesh-shape``/``--multi-pod`` the fake device grid, ``--tp N`` overrides
 just its 'model' axis (so ``--pp --tp --zero`` compose into joint 3D+ZeRO
-probes on small fake meshes).  With ``--pp N`` (> 1) each pipeline rank is
+probes on small fake meshes); ``--sp N`` (N = the TP degree) additionally
+shards the probe's boundary/residual sequence dims over 'model' and sets
+the analytic sp divisor — the measurement side of the executor's Megatron
+sequence parallelism.  With ``--pp N`` (> 1) each pipeline rank is
 compiled as its own program holding the schedule's in-flight microbatch
 counts (``--schedule {1f1b,interleaved,dualpipe}``, ``--pp-chunks`` virtual
 stages per rank) next to ``estimate_memory(stage=r, schedule=...)`` — the
 measurement side of ``docs/pipeline-schedules.md``.
 
 Artifacts: one JSON per combo in ``benchmarks/artifacts/dryrun/<tag>.json``
-(tag = arch__shape__mesh[__ppN[__<schedule><v>]][__z<zero>][suffix]; the
-mesh component encodes tp, the ``__z`` component appears for non-default
-``--zero``) with status, lower/compile wall-times, ``memory_analysis``
-fields, flops/bytes from ``cost_analysis``, per-collective HLO byte counts
-(plain runs) or the per-rank records (``--pp`` runs: layers, per-chunk
-in-flight, memory, analytic breakdown, plus top-level ``tp``/``zero``).
+(tag = arch__shape__mesh[__ppN[__<schedule><v>]][__z<zero>][__sp<N>][suffix];
+the mesh component encodes tp, the ``__z`` component appears for
+non-default ``--zero``, ``__sp`` for ``--sp`` > 1) with status,
+lower/compile wall-times, ``memory_analysis`` fields, flops/bytes from
+``cost_analysis``, per-collective HLO byte counts (plain runs) or the
+per-rank records (``--pp`` runs: layers, per-chunk in-flight, memory,
+analytic breakdown, plus top-level ``tp``/``zero``/``sp``).
 Existing artifacts are reused unless ``--force``;
 ``benchmarks/validate_memory.py`` consumes them.
 """
@@ -215,17 +219,22 @@ def _fake_state(abstract_params):
                       v=abstract_params)
 
 
-def _stage_input_shardings(mesh, arrs):
+def _stage_input_shardings(mesh, arrs, sp: int = 1):
+    """Shardings for the per-rank probe's in-flight boundary arrays
+    (k, b, s[, h]): batch over the data axes; with ``sp`` > 1 additionally
+    the seq dim of the bf16 boundary activations over 'model' — the
+    executor's seq-sharded residency, so the probe's measured bytes carry
+    the /sp divisor the analytic column models."""
     ba = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    if not ba:
-        return tuple(NamedSharding(mesh, P()) for _ in arrs)
     out = []
     for a in arrs:
-        if a.shape[1] % int(np.prod([mesh.shape[x] for x in ba])) == 0:
-            out.append(NamedSharding(
-                mesh, P(None, ba, *(None,) * (len(a.shape) - 2))))
-        else:
-            out.append(NamedSharding(mesh, P()))
+        entries = [None] * len(a.shape)
+        if ba and a.shape[1] % int(np.prod([mesh.shape[x] for x in ba])) == 0:
+            entries[1] = ba
+        if sp > 1 and len(a.shape) >= 4 and "model" in mesh.axis_names \
+                and a.shape[2] % mesh.shape["model"] == 0:
+            entries[2] = "model"
+        out.append(NamedSharding(mesh, P(*entries)))
     return tuple(out)
 
 
@@ -326,7 +335,7 @@ def _make_rank_probe(spec, opts, chunks, firsts, lasts, in_flight):
 
 def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
            force: bool = False, tag_suffix: str = "", mesh_shape=None,
-           schedule: str = "1f1b", n_chunks: int = 1,
+           schedule: str = "1f1b", n_chunks: int = 1, sp: int = 1,
            **build_kw) -> Dict[str, Any]:
     """--pp N [--schedule ...]: lower + compile each pipeline rank as its
     own program on the rank's (data/pp, model) sub-mesh and record per-rank
@@ -356,8 +365,12 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
     sched_tag = "" if schedule == "1f1b" else f"__{schedule}{v}"
     zero = build_kw.get("zero", "os+g")
     zero_tag = "" if zero == "os+g" else f"__z{zero.replace('+', '')}"
+    if sp not in (1, model_ax):
+        raise ValueError(f"--sp must be 1 or the TP degree {model_ax} "
+                         f"(Megatron SP ties sp to tp), got {sp}")
+    sp_tag = "" if sp == 1 else f"__sp{sp}"
     tag = (f"{arch}__{shape_name}__{mesh_tag}__pp{pp}{sched_tag}{zero_tag}"
-           f"{tag_suffix}")
+           f"{sp_tag}{tag_suffix}")
     path = os.path.join(ART_DIR, tag + ".json")
     if os.path.exists(path) and not force:
         with open(path) as f:
@@ -366,7 +379,7 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
     info = SHAPES[shape_name]
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "pp": pp,
                            "schedule": schedule, "n_chunks": v,
-                           "tp": model_ax, "zero": zero,
+                           "tp": model_ax, "zero": zero, "sp": sp,
                            "mesh": mesh_tag, "options": build_kw}
     try:
         if info["kind"] != "train":
@@ -391,7 +404,7 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
         n_exp = spec.moe.n_routed if spec.is_moe else None
         ep = min(model_ax, n_exp) if n_exp else 1
         cfg = ParallelConfig(
-            dp=dp, tp=model_ax, pp=pp, ep=ep, etp=1, sp=True,
+            dp=dp, tp=model_ax, pp=pp, ep=ep, etp=1, sp=sp > 1,
             zero=ZeROStage(build_kw.get("zero", "os+g")),
             recompute=RecomputePolicy(build_kw.get("recompute", "none")),
             micro_batch=max(b_micro // dp, 1), seq_len=info["seq"])
@@ -400,7 +413,11 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
                                        n_chunks=v)
         g_total = n_model_chunks(schedule, pp, v)
         stages = []
-        with axis_rules(mesh):
+        # --sp: route the logical "seq" axis onto 'model' so the probe's
+        # boundary/residual constraints shard the sequence — the measured
+        # counterpart of the analytic /sp divisor
+        sp_rules = {"seq": "model"} if sp > 1 else None
+        with axis_rules(mesh, sp_rules):
             for r in range(pp):
                 chunks = all_chunks[r]
                 placed = sched.placement[r]
@@ -430,7 +447,7 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
                 probe = _make_rank_probe(spec, opts, chunks, firsts, lasts,
                                          list(ks))
                 st_sh = state_shardings(abstract_state, mesh, cfg.zero)
-                in_sh = _stage_input_shardings(mesh, arrs)
+                in_sh = _stage_input_shardings(mesh, arrs, sp=sp)
                 t0 = time.perf_counter()
                 compiled = jax.jit(
                     probe, in_shardings=(st_sh,) + in_sh,
@@ -550,6 +567,12 @@ def main() -> int:
                     help="override the mesh's 'model' axis (TP degree) — "
                          "with --pp/--zero this gives joint 3D+ZeRO probes "
                          "on small fake meshes, e.g. --pp 2 --tp 2 --zero os")
+    ap.add_argument("--sp", type=int, default=1,
+                    help="sequence-parallel degree for --pp probes (1 or "
+                         "the TP degree — Megatron SP ties sp to tp): "
+                         "shards the probe's boundary/residual seq dims "
+                         "over 'model', tags the artifact __sp<N> and sets "
+                         "the analytic sp divisor")
     ap.add_argument("--schedule", default="1f1b",
                     choices=["1f1b", "interleaved", "dualpipe"],
                     help="pipeline schedule for --pp probes: sets per-rank "
@@ -584,6 +607,10 @@ def main() -> int:
         assert args.arch and args.shape, "--arch & --shape or --all"
         combos = [(args.arch, args.shape)]
 
+    if args.sp > 1 and args.pp <= 1:
+        ap.error("--sp applies to the per-rank --pp probes; pass --pp N "
+                 "(the plain-probe path would silently measure replicated "
+                 "sequence dims under an __sp tagless artifact)")
     failures = 0
     n_chunks = args.pp_chunks if args.pp_chunks is not None \
         else (1 if args.schedule == "1f1b" else 2)
@@ -592,7 +619,7 @@ def main() -> int:
             rec = run_pp(a, s, args.pp, multi_pod=args.multi_pod,
                          force=args.force, tag_suffix=args.tag_suffix,
                          mesh_shape=mesh_shape, schedule=args.schedule,
-                         n_chunks=n_chunks, **build_kw)
+                         n_chunks=n_chunks, sp=args.sp, **build_kw)
         else:
             rec = run_one(a, s, multi_pod=args.multi_pod, force=args.force,
                           tag_suffix=args.tag_suffix, mesh_shape=mesh_shape,

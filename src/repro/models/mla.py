@@ -49,6 +49,17 @@ def _towers(p: Params, spec: ModelSpec, x: jnp.ndarray,
     shard, so the compressed latents — the points where the replicated
     towers fan out into head-sharded up-projections — are where the
     backward pass must all-reduce.
+
+    Under the executor's sequence parallelism the caller gathers the
+    seq-sharded block input *before* these towers
+    (``models.pipeline._slot_apply``): the replicated latent towers always
+    consume the full-sequence view, so cq/c_kv stay ``2bs(d_cq+d_c)`` per
+    shard — the terms the paper's Table 10 leaves undivided by sp — but
+    ``tpf`` must then be ``None``: the entry ğ's reduce-scatter backward
+    already sums the per-shard partial cotangents, so keeping
+    ``copy_to_tp``'s psum-bwd here would double-count (tp× gradients on
+    the whole attention branch).  The tower weight grads are instead
+    completed by the executor's post-loop 'model'-axis psum.
     """
     m = spec.mla
     b, s, _ = x.shape

@@ -68,7 +68,8 @@ def _positions_in_expert(eids: jnp.ndarray, n_expert: int
 def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
                 capacity_factor: float = 1.25,
                 router_impl: str = "softmax",
-                tp_f=None, tp_g=None) -> MoEOutput:
+                tp_f=None, tp_g=None,
+                sp_axis: Optional[str] = None) -> MoEOutput:
     """x: (b, s, h) -> (b, s, h).
 
     DeepSeek-v3 uses sigmoid scoring + top-k renormalisation; classic top-k
@@ -81,7 +82,18 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
     bit-identical on every shard, ``tp_f`` wraps the dispatch buffer and
     shared-expert input, ``tp_g`` sums the partial expert outputs.  The
     returned ``y`` and ``aux_loss`` are then replicated across TP.
-    """
+
+    ``sp_axis`` marks the executor's sequence-parallel mode: ``x`` is a
+    *seq shard* (each TP rank routes and dispatches its own disjoint token
+    chunk — the router activations live 1/sp per shard), ``tp_f`` is then
+    the ğ all-gather whose token dim for the (E, C, h) dispatch buffer is
+    its capacity dim, so the expert FFN still sees every shard's tokens,
+    and ``tp_g`` reduce-scatters each shard its own tokens' outputs.  The
+    load-balance means are combined across shards (``pmean_sp``) before
+    the aux product — per-shard token sets are disjoint and equal-sized,
+    so the combined aux equals the sp=1 value exactly; the resulting
+    seq-partial router gradient is completed by the executor's post-loop
+    'model'-axis psum."""
     e = spec.moe
     b, s, h = x.shape
     T = b * s
@@ -103,6 +115,9 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
     me = jnp.mean(probs, axis=0)
     ce = jnp.mean(
         (jax.nn.one_hot(eids, E, dtype=jnp.float32).sum(1)), axis=0) / K
+    if sp_axis is not None:
+        from repro.parallel.tp import pmean_sp
+        me, ce = pmean_sp(me, sp_axis), pmean_sp(ce, sp_axis)
     aux = E * jnp.sum(me * ce)
 
     C = int(max(1, round(T * K / E * capacity_factor)))

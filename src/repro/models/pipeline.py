@@ -396,8 +396,8 @@ def unstack_pipeline_grads(gstack: PyTree, params: PyTree, spec: ModelSpec,
 
 def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
                 x: jnp.ndarray, positions: jnp.ndarray, mask: jnp.ndarray,
-                moe_flag: jnp.ndarray, tp_axis: Optional[str] = None
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                moe_flag: jnp.ndarray, tp_axis: Optional[str] = None,
+                sp: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One union layer slot.  ``mask`` (scalar f32) turns pad slots into the
     identity; ``moe_flag`` selects the MoE vs dense-MLP branch when the model
     mixes kinds (only the selected branch receives gradient).
@@ -407,19 +407,43 @@ def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
     (``parallel.tp.tp_local_spec``) matching 'model'-sharded weights, and
     every block is bracketed by the f/g operators of ``parallel.tp`` —
     ``copy_to_tp`` where the replicated residual enters sharded compute,
-    ``reduce_from_tp`` where partial block outputs rejoin it."""
-    from repro.parallel.tp import copy_to_tp, reduce_from_tp
+    ``reduce_from_tp`` where partial block outputs rejoin it.
+
+    ``sp`` (Megatron sequence parallelism, degree = tp) replaces the f/g
+    pair with ğ and its dual: ``x`` arrives *seq-sharded* across
+    ``tp_axis``, the norms run on the shard, ``gather_from_sp`` assembles
+    the full sequence on entry to each TP region and ``scatter_to_sp``
+    reduce-scatters block outputs back onto the shard.  The sharded token
+    dim is always the second-to-last (the residual's seq, the MoE dispatch
+    buffer's capacity, flat-token rows), hence ``ndim - 2`` below."""
+    from repro.parallel.tp import (copy_to_tp, gather_from_sp,
+                                   reduce_from_tp, scatter_to_sp)
     gemma = spec.name.startswith("gemma")
     window = spec.sliding_window
-    tpf = (lambda t: copy_to_tp(t, tp_axis)) if tp_axis else (lambda t: t)
-    tpg = (lambda t: reduce_from_tp(t, tp_axis)) if tp_axis else (lambda t: t)
+    sp = bool(sp and tp_axis)
+    if sp:
+        tpf = lambda t: gather_from_sp(t, tp_axis, t.ndim - 2)
+        tpg = lambda t: scatter_to_sp(t, tp_axis, t.ndim - 2)
+    else:
+        tpf = (lambda t: copy_to_tp(t, tp_axis)) if tp_axis else (lambda t: t)
+        tpg = (lambda t: reduce_from_tp(t, tp_axis)) if tp_axis \
+            else (lambda t: t)
     h1 = rmsnorm(p["ln1"], x, spec.norm_eps, gemma_style=gemma)
     if spec.attention == AttentionKind.MLA:
         # MLA's replicated down-projections run redundantly on every shard;
-        # the f operator sits on the compressed latents inside _towers
-        mix = M.mla_forward(p["attn"], spec, h1, positions,
-                            impl=opts.attn_impl,
-                            tpf=tpf if tp_axis else None)
+        # the f operator sits on the compressed latents inside _towers.
+        # Under SP the towers consume the *gathered* full-sequence view
+        # (tpf(h1)) — the latents stay full-length on every shard, which is
+        # why the paper's 2bs(d_cq+d_c) terms carry no /sp divisor — and
+        # the latents must NOT carry copy_to_tp: the entry ğ's
+        # reduce-scatter backward already sums the per-shard partial
+        # cotangents, so a psum-bwd on the latents would double-count
+        # (tp× gradients).  The tower weight grads are then head-partial
+        # per shard; the executor's post-loop 'model' psum completes them
+        # (train.pipeline_loop).
+        lat_f = None if (sp or not tp_axis) else tpf
+        mix = M.mla_forward(p["attn"], spec, tpf(h1) if sp else h1,
+                            positions, impl=opts.attn_impl, tpf=lat_f)
     else:
         mix = A.gqa_forward(p["attn"], spec, tpf(h1), positions,
                             impl=opts.attn_impl, window=window)
@@ -433,7 +457,8 @@ def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
                           capacity_factor=opts.capacity_factor,
                           router_impl=opts.router_impl,
                           tp_f=tpf if tp_axis else None,
-                          tp_g=tpg if tp_axis else None)
+                          tp_g=tpg if tp_axis else None,
+                          sp_axis=tp_axis if sp else None)
         sel = moe_flag.astype(x.dtype)
         delta = out.y * sel
         if has_mlp:
@@ -451,16 +476,20 @@ def pipeline_stage_apply(layers_p: PyTree, spec: ModelSpec,
                          opts: ModelOptions, x: jnp.ndarray,
                          positions: jnp.ndarray, mask: jnp.ndarray,
                          moe_flag: jnp.ndarray,
-                         tp_axis: Optional[str] = None
+                         tp_axis: Optional[str] = None,
+                         sp: bool = False
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Scan this stage's l_max union slots.  ``layers_p`` leaves are
     (l_max, ...); ``mask``/``moe_flag`` are (l_max,).  With ``tp_axis`` the
-    slots run manual TP (see ``_slot_apply``)."""
+    slots run manual TP; with ``sp`` additionally Megatron sequence
+    parallelism — ``x`` is then the seq-sharded residual (see
+    ``_slot_apply``)."""
 
     def body(carry, inp):
         xc, aux = carry
         p_slot, m, f = inp
-        xc, a = _slot_apply(p_slot, spec, opts, xc, positions, m, f, tp_axis)
+        xc, a = _slot_apply(p_slot, spec, opts, xc, positions, m, f, tp_axis,
+                            sp)
         return (xc, aux + a), None
 
     body = _remat(body, opts.recompute)

@@ -28,7 +28,7 @@ _state = threading.local()
 # "pipe" holds the stage dim of stage-stacked pipeline params.
 DEFAULT_RULES: Rules = {
     "batch": ("pod", "data"),
-    "seq": None,
+    "seq": None,              # dryrun --sp overrides to "model" (Megatron SP)
     "embed": None,            # hidden/residual dim replicated
     "vocab": "model",
     "heads": "model",

@@ -14,6 +14,26 @@ paired f/g operators spelled out:
   backward.  Placed where partial results *leave* a TP region (attention
   out-projection, MLP/expert down-projection, vocab-parallel reductions).
 
+With sequence parallelism on (``make_pipeline_train_step(..., sp=True)``,
+degree tied to tp — the paper's SP column) the residual stream lives
+*seq-sharded* across the same 'model' axis and the f/g pair is replaced by
+its SP counterparts (Megatron's ğ and its dual):
+
+* :func:`gather_from_sp` — ğ: all-gather along the sharded token dim
+  forward (the TP region sees the full sequence), reduce-scatter backward
+  (each shard gets the exact summed cotangent for its seq chunk).
+* :func:`scatter_to_sp` — ğ's dual: reduce-scatter forward (the psum of
+  ``reduce_from_tp`` fused with re-sharding the output sequence),
+  all-gather backward.
+
+LayerNorm inputs, residuals and boundary activations then cost 1/sp of
+their replicated bytes — exactly the ``/sp`` divisor the paper's Table 10
+applies to sequence-resident terms.  The price is Megatron's known grad
+asymmetry: weights consumed *inside* the seq-sharded region (the norm
+scales, the MoE router) see only their shard's tokens, so their local
+gradients are seq-partial and the executor completes them with one
+``psum`` over 'model' after the tick loop (``train.pipeline_loop``).
+
 Why not plain ``jax.lax.psum``: under ``shard_map(check_rep=False)`` jax
 cannot prove replication, so it transposes ``psum`` to another ``psum`` —
 weight gradients come out ``tp``× too large.  The custom-vjp pairs encode
@@ -97,6 +117,79 @@ _pmax_stopgrad.defvjp(_pmax_fwd, _pmax_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Sequence-parallel boundary operators (Megatron's ğ and its dual)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def gather_from_sp(x: jnp.ndarray, axis: str = TP_AXIS,
+                   dim: int = 1) -> jnp.ndarray:
+    """Megatron SP's ğ: all-gather the seq-sharded tensor along ``dim``
+    forward (every shard sees the full sequence at the entry of a TP
+    region); reduce-scatter the cotangent backward, which both sums the
+    per-shard partial cotangents (the job ``copy_to_tp``'s psum-bwd did)
+    and re-shards the sequence."""
+    return jax.lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def _gather_sp_fwd(x, axis, dim):
+    return jax.lax.all_gather(x, axis, axis=dim, tiled=True), None
+
+
+def _gather_sp_bwd(axis, dim, _, ct):
+    return (jax.lax.psum_scatter(ct, axis, scatter_dimension=dim,
+                                 tiled=True),)
+
+
+gather_from_sp.defvjp(_gather_sp_fwd, _gather_sp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def scatter_to_sp(x: jnp.ndarray, axis: str = TP_AXIS,
+                  dim: int = 1) -> jnp.ndarray:
+    """ğ's dual: reduce-scatter along ``dim`` forward where partial results
+    leave a TP region (``reduce_from_tp``'s psum fused with re-sharding the
+    output sequence); all-gather the seq-sharded cotangent backward (every
+    shard's sharded weights need the full-sequence cotangent)."""
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
+
+
+def _scatter_sp_fwd(x, axis, dim):
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=dim,
+                                tiled=True), None
+
+
+def _scatter_sp_bwd(axis, dim, _, ct):
+    return (jax.lax.all_gather(ct, axis, axis=dim, tiled=True),)
+
+
+scatter_to_sp.defvjp(_scatter_sp_fwd, _scatter_sp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def pmean_sp(x: jnp.ndarray, axis: str = TP_AXIS) -> jnp.ndarray:
+    """Cross-shard mean of per-shard token statistics (the MoE router's
+    load-balance means under SP, where each shard routes a disjoint seq
+    chunk).  Forward ``pmean``; backward hands each shard ``ct / sp`` —
+    the exact chain factor ∂mean/∂(shard summand), with no psum because
+    the downstream consumer (the aux loss) is replicated, so every shard
+    already carries the identical cotangent.  The seq-partial router
+    gradients this produces are completed by the executor's post-loop
+    'model'-axis psum (see ``train.pipeline_loop``)."""
+    return jax.lax.pmean(x, axis)
+
+
+def _pmean_sp_fwd(x, axis):
+    return jax.lax.pmean(x, axis), None
+
+
+def _pmean_sp_bwd(axis, _, ct):
+    return (ct / jax.lax.psum(1, axis),)
+
+
+pmean_sp.defvjp(_pmean_sp_fwd, _pmean_sp_bwd)
+
+
+# ---------------------------------------------------------------------------
 # TP-local model view + loud divisibility guard
 # ---------------------------------------------------------------------------
 
@@ -109,6 +202,24 @@ def check_tp_supported(spec: ModelSpec, tp: int) -> None:
             f"{spec.name}: tp={tp} does not divide {', '.join(bad)}; the "
             f"pipeline executor's manual TP requires exact divisibility "
             f"(the GSPMD dry-run path replicates indivisible dims instead)")
+
+
+def check_sp_supported(spec: ModelSpec, tp: int, seq_len: int) -> None:
+    """Executor guard for sequence parallelism (degree tied to ``tp``):
+    the token dim must divide exactly — ``all_gather``/``psum_scatter``
+    have no replicate-fallback, and the analytic model's fallback
+    (``core.activations._seq_shard_or_warn``) would silently diverge from
+    a runtime that padded."""
+    if tp <= 1:
+        raise ValueError(
+            f"{spec.name}: sequence parallelism ties its degree to TP "
+            f"(Megatron SP); sp needs a 'model' mesh axis > 1, got tp={tp}")
+    bad = tp_violations(spec, tp, sp=tp, seq_len=seq_len)
+    if bad:
+        raise ValueError(
+            f"{spec.name}: sp={tp} not executable: {', '.join(bad)} "
+            f"(the boundary all-gather/reduce-scatter pair requires exact "
+            f"divisibility)")
 
 
 def tp_local_spec(spec: ModelSpec, tp: int) -> ModelSpec:
@@ -137,18 +248,23 @@ def tp_local_spec(spec: ModelSpec, tp: int) -> ModelSpec:
 
 def embed_tp(w_local: jnp.ndarray, tokens: jnp.ndarray, *,
              axis: str = TP_AXIS, scale_by_dim: bool = False,
-             h: int = 0) -> jnp.ndarray:
+             h: int = 0, sp: bool = False) -> jnp.ndarray:
     """Row-sharded embedding lookup: each shard gathers the rows it owns
     (shard i holds vocab rows [i·v_loc, (i+1)·v_loc)), zeros the rest, and
     the partial results are summed.  Backward scatters the exact cotangent
-    into the owning shard's rows only."""
+    into the owning shard's rows only.
+
+    ``sp`` fuses the partial-sum with sequence sharding: the psum becomes
+    a reduce-scatter over the token dim, so the residual stream leaves the
+    embedding already seq-sharded; backward all-gathers the cotangent, so
+    each shard's rows still receive the exact full-sequence gradient."""
     v_loc = w_local.shape[0]
     off = jax.lax.axis_index(axis) * v_loc
     idx = tokens - off
     ok = (idx >= 0) & (idx < v_loc)
     x = jnp.take(w_local, jnp.clip(idx, 0, v_loc - 1), axis=0)
     x = jnp.where(ok[..., None], x, jnp.zeros((), x.dtype))
-    x = reduce_from_tp(x, axis)
+    x = scatter_to_sp(x, axis, 1) if sp else reduce_from_tp(x, axis)
     if scale_by_dim:
         x = x * jnp.asarray(h ** 0.5, x.dtype)
     return x

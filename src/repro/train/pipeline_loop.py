@@ -59,6 +59,30 @@ gradients (sharded and replicated leaves alike) are exact with no extra
 model-axis reduction, and the boundary ``ppermute`` payloads stay
 replicated across 'model', composing with TP untouched.
 
+``sp=True`` adds Megatron-style sequence parallelism on the same 'model'
+axis (degree = tp, the paper's SP column): the residual stream, norm
+inputs and boundary activations live *seq-sharded* — (b, s/tp, h) per
+device, the Table-10 ``/sp`` divisor made executor-real — and the f/g
+pair is swapped for ğ and its dual (``gather_from_sp``: all-gather-fwd /
+reduce-scatter-bwd on entry to every TP region; ``scatter_to_sp``:
+reduce-scatter-fwd / all-gather-bwd on exit).  The embedding
+reduce-scatters straight into the seq shard, the head gathers the
+final-norm output before the column-sharded logits, MLA's replicated
+latent towers consume the gathered view (latents stay full-length — the
+paper's undivided 2bs(d_cq+d_c) terms), and MoE routes/dispatches each
+shard's own token chunk with the dispatch buffer gathered over its
+capacity dim (``models.moe.moe_forward(sp_axis=...)``).  Boundary
+``ppermute`` payloads and the in-flight slot rings shrink to 1/tp of
+their bytes.  One asymmetry is inherited from Megatron: weights consumed
+*inside* the seq-sharded region — the ln1/ln2/final-norm scales and the
+MoE router — see only their shard's tokens (their local grads are
+seq-partial), and MLA's replicated latent towers run *without*
+``copy_to_tp`` under SP (the entry ğ's reduce-scatter backward performs
+the cross-shard sum; a psum-bwd on the latents would double-count), so
+their weight grads are head-partial; the executor completes exactly
+those leaves with a single ``psum`` over 'model' after the tick loop
+(every other leaf stays exact-local as before).
+
 ``zero`` applies DeepSpeed-style state partitioning at the executor level
 (previously dry-run-only): {master, m, v} — and for ``os+g`` the fp32
 gradient buffers — carry ``with_sharding_constraint`` s from
@@ -77,11 +101,11 @@ loss and post-update params to bf16-accumulation tolerance at
 pp∈{2,4} × tp∈{1,2} × dp∈{1,2} (``tests/test_pipeline_1f1b.py``,
 ``tests/test_pipeline_3d.py``).
 
-Scope notes: sequence parallelism is not executed (activations are
-replicated across 'model'; the analytic ``sp`` knob is estimator-only),
-and MoE dispatch is ETP-style (all experts on every shard, expert-ff
-sharded) — EP placement remains GSPMD/dry-run territory.  MoE aux uses the
-scatter dispatch and is pmean'd across data shards.
+Scope notes: MoE dispatch is ETP-style (all experts on every shard,
+expert-ff sharded) — EP placement remains GSPMD/dry-run territory.  MoE
+aux uses the scatter dispatch and is pmean'd across data shards (and,
+under ``sp``, its load-balance means are combined across the seq shards
+so the aux value matches sp=1 exactly).
 """
 
 from __future__ import annotations
@@ -92,6 +116,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.notation import AttentionKind
 from repro.core.parallel_config import ZeROStage
 from repro.models.layers import embed_apply, rmsnorm
 from repro.models.model import Model
@@ -103,8 +128,9 @@ from repro.optim.adamw import TrainState, adamw_update
 from repro.parallel.compat import shard_map
 from repro.parallel.sharding import (grad_shardings, pipeline_stage_specs,
                                      state_shardings)
-from repro.parallel.tp import (ce_sum_tp, check_tp_supported, copy_to_tp,
-                               embed_tp, tp_local_spec)
+from repro.parallel.tp import (ce_sum_tp, check_sp_supported,
+                               check_tp_supported, copy_to_tp, embed_tp,
+                               gather_from_sp, tp_local_spec)
 from repro.train.loop import TrainConfig, _split_micro
 from repro.train.schedules import build_exec_tables, make_schedule
 
@@ -142,7 +168,8 @@ def _dyn(a: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
 
 def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
                              schedule: str = "1f1b", n_chunks: int = 1,
-                             zero: ZeROStage = ZeROStage.NONE):
+                             zero: ZeROStage = ZeROStage.NONE,
+                             sp: bool = False):
     """Build the jit-able schedule-driven pipeline step for ``mesh`` (axes
     ('pipe'[, 'data'][, 'model'])); pp = mesh.shape['pipe'], TP degree =
     mesh.shape['model'].  Same contract as ``make_train_step``.  ``zero``
@@ -151,7 +178,13 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     steps should ``device_put`` it with
     ``parallel.sharding.state_shardings(abstract_state, mesh, zero,
     rules=pipeline_loop._EXEC_TP_RULES)`` — the executor's ETP expert
-    layout (identical to the default rules for non-MoE models)."""
+    layout (identical to the default rules for non-MoE models).
+
+    ``sp=True`` turns on Megatron sequence parallelism (degree tied to the
+    'model' axis size; requires tp > 1 and ``seq_len % tp == 0`` — see the
+    module docstring for the boundary-operator construction).  The
+    parameter/optimizer layout and ZeRO constraints are unchanged: SP only
+    re-shards activations, so it composes with any ``zero`` stage."""
     spec, opts = model.spec, model.opts
     check_pipeline_supported(spec)
     if "pipe" not in mesh.axis_names:
@@ -160,6 +193,11 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     tp = mesh.shape.get("model", 1)
     tp_axis = "model" if tp > 1 else None
     check_tp_supported(spec, tp)
+    sp = bool(sp)
+    if sp and not tp_axis:
+        raise ValueError(
+            "sp=True needs a 'model' mesh axis of size > 1: Megatron SP "
+            "ties the sequence-parallel degree to TP")
     spec_run = tp_local_spec(spec, tp)
     if zero == ZeROStage.OS_G_PARAMS:
         raise NotImplementedError(
@@ -204,6 +242,7 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
         smask, sflag = slot_masks[0], slot_flags[0]     # (V, l_max) local
         first_l, last_l = firsts[0], lasts[0]           # (V,) local
         _, b_loc, s = toks.shape
+        s_loc = s // tp if sp else s      # SP: boundary tensors seq-sharded
         h = spec.h
         adt = p["embed"]["w"].dtype
         p_layers = p["layers"]
@@ -214,22 +253,28 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             the first model chunk), the chunk's union slots, head + local CE
             sum (meaningful on the last model chunk, zero-cotangent
             elsewhere).  Under TP the embedding is row-sharded and the
-            logits column-sharded on 'model' (vocab-parallel CE)."""
+            logits column-sharded on 'model' (vocab-parallel CE); under SP
+            the residual in and out of the slots — and the returned ``y`` —
+            is the (b, s/tp, h) seq shard, and the head gathers the
+            final-norm output before the column-sharded projection."""
             if tp_axis:
                 x0 = embed_tp(ps["embed"]["w"], tok, axis=tp_axis,
-                              scale_by_dim=gemma, h=spec.h)
+                              scale_by_dim=gemma, h=spec.h, sp=sp)
             else:
                 x0 = embed_apply(ps["embed"], tok, scale_by_dim=gemma,
                                  h=spec.h)
             x = jnp.where(first_l[c] > 0.5, x0, x_recv)
             positions = jnp.broadcast_to(jnp.arange(s)[None], (b_loc, s))
             y, aux = pipeline_stage_apply(pl, spec_run, opts, x, positions,
-                                          smask[c], sflag[c], tp_axis)
+                                          smask[c], sflag[c], tp_axis,
+                                          sp=sp)
             z = rmsnorm(ps["final_norm"], y, spec.norm_eps, gemma_style=gemma)
             w_out = ps["embed"]["w"].T if spec.tie_embeddings \
                 else ps["head"]["w"]
             if tp_axis:
-                logits = copy_to_tp(z, tp_axis) @ w_out
+                zin = gather_from_sp(z, tp_axis, 1) if sp \
+                    else copy_to_tp(z, tp_axis)
+                logits = zin @ w_out
                 ce = ce_sum_tp(logits, tok, _ce_mask(mm, tok), axis=tp_axis)
             else:
                 logits = z @ w_out
@@ -316,8 +361,8 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
                 gbuf = write(gbuf, tabs["rgu_act"], tabs["rgu_idx"], dx_up)
             return (xbuf, gbuf, gl, gsh, loss, aux_acc), None
 
-        init = (jnp.zeros((V * XS, b_loc, s, h), adt),
-                jnp.zeros((V * GS, b_loc, s, h), adt),
+        init = (jnp.zeros((V * XS, b_loc, s_loc, h), adt),
+                jnp.zeros((V * GS, b_loc, s_loc, h), adt),
                 jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
                              p_layers),
                 jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
@@ -328,6 +373,32 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             tick, init, jnp.arange(T))
 
         g = dict(gsh, layers=gl)
+        if sp:
+            # Megatron SP grad completion: weights applied *inside* the
+            # seq-sharded region (norm scales, the MoE router) accumulate
+            # grads from their shard's tokens only, and MLA's replicated
+            # latent towers — which run without copy_to_tp under SP, the
+            # entry ğ doing the cross-shard sum instead — accumulate only
+            # their shard's heads' contribution.  One psum over 'model'
+            # assembles the full gradient for exactly those leaves.  Every
+            # other leaf's grad is already exact-local (the ğ/dual
+            # operators carry the cross-shard sums in their backward
+            # rules), so it must NOT be psummed — that would scale it by
+            # tp.
+            lay = dict(g["layers"])
+            for k in ("ln1", "ln2"):
+                lay[k] = jax.lax.psum(lay[k], tp_axis)
+            if "moe" in lay:
+                lay["moe"] = dict(
+                    lay["moe"],
+                    router=jax.lax.psum(lay["moe"]["router"], tp_axis))
+            if spec.attention == AttentionKind.MLA:
+                attn_g = dict(lay["attn"])
+                for k in ("w_dq", "w_dkv", "w_kr", "q_norm", "kv_norm"):
+                    attn_g[k] = jax.lax.psum(attn_g[k], tp_axis)
+                lay["attn"] = attn_g
+            g = dict(g, layers=lay,
+                     final_norm=jax.lax.psum(g["final_norm"], tp_axis))
         g = jax.tree.map(lambda a: _psum(a, data_axes)[None], g)
         aux_acc = jax.lax.pmean(aux_acc, data_axes) if data_axes else aux_acc
         loss_sum = jax.lax.psum(loss + 0.01 * aux_acc, "pipe")
@@ -355,6 +426,8 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             raise ValueError(
                 f"micro-batch size {toks.shape[1]} must divide the data axes "
                 f"(size {data_size})")
+        if sp:
+            check_sp_supported(spec, tp, toks.shape[2])
         if zero != ZeROStage.NONE:
             state = _zero_constrain(state)
         stacked = stack_pipeline_params(state.params, spec, S,

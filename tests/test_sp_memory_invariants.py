@@ -1,0 +1,199 @@
+"""SP invariants of the analytic activation model (hypothesis property
+tests) + the sequence-divisibility guards.
+
+The paper's Table 10 divides every sequence-resident tensor outside the
+TP regions by sp and leaves the replicated MLA latents (2bs(d_cq+d_c))
+and the MoE router activations (4bsN + 2bsN_r) undivided.  Now that the
+executor makes sp real (`make_pipeline_train_step(..., sp=True)`), these
+properties are the contract between the measured and analytic sides:
+
+* activation bytes are monotone non-increasing in sp (over divisors of s);
+* the sp=1 → sp delta is *exactly* the sum of the paper's /sp terms —
+  nothing else moves;
+* the MLA latent terms are invariant: scaling d_cq/d_c changes bytes but
+  not the sp delta;
+* indivisible ``s % sp`` warns loudly and falls back to SP-replicated
+  accounting (mirroring `test_tp_guards.py`), is listed by
+  ``tp_violations(..., sp=..., seq_len=...)``, and is rejected outright by
+  the executor guard ``parallel.tp.check_sp_supported``.
+"""
+
+import dataclasses
+
+import pytest
+
+try:  # the property suite needs hypothesis (requirements-dev.txt); the
+    # guard tests below run regardless — mirror test_tp_guards.py
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+    def _skip(*_a, **_k):
+        return pytest.mark.skip(
+            reason="property suite needs hypothesis (requirements-dev.txt)")
+
+    given = settings = _skip
+
+    class _Chain:
+        def map(self, *_a, **_k):
+            return self
+
+    class st:  # noqa: N801 — stand-in so strategy expressions still parse
+        @staticmethod
+        def _chain(*_a, **_k):
+            return _Chain()
+        integers = sampled_from = tuples = _chain
+
+from repro.configs import get_spec
+from repro.core import ParallelConfig, RecomputePolicy, ZeROStage, estimate_memory
+from repro.core.activations import (dense_mlp_activation_bytes,
+                                    gqa_activation_bytes,
+                                    mla_activation_bytes,
+                                    moe_activation_bytes)
+from repro.core.notation import tp_violations
+
+QWEN = get_spec("qwen2-1.5b")
+DS3 = get_spec("deepseek-v3")
+
+SP_DEGREES = [1, 2, 4, 8, 16]
+
+
+def sp_pairs():
+    return st.tuples(st.sampled_from(SP_DEGREES),
+                     st.sampled_from(SP_DEGREES)).map(sorted)
+
+
+@settings(max_examples=60, deadline=None)
+@given(b=st.integers(1, 4), s16=st.integers(1, 256), pair=sp_pairs(),
+       tp=st.sampled_from([1, 2]),
+       rc=st.sampled_from(list(RecomputePolicy)))
+def test_activation_bytes_monotone_in_sp(b, s16, pair, tp, rc):
+    """Larger sp never costs more, for every family and recompute policy
+    (s is a multiple of 16, so every drawn sp divides it)."""
+    s = 16 * s16
+    lo, hi = pair
+    for fn, spec in ((mla_activation_bytes, DS3),
+                     (gqa_activation_bytes, QWEN),
+                     (dense_mlp_activation_bytes, QWEN)):
+        assert fn(spec, b, s, tp=tp, sp=hi, cp=1, recompute=rc) \
+            <= fn(spec, b, s, tp=tp, sp=lo, cp=1, recompute=rc)
+    assert moe_activation_bytes(DS3, b, s, sp=hi, cp=1, ep=1, recompute=rc) \
+        <= moe_activation_bytes(DS3, b, s, sp=lo, cp=1, ep=1, recompute=rc)
+
+
+@settings(max_examples=60, deadline=None)
+@given(b=st.integers(1, 4), s16=st.integers(1, 256),
+       sp=st.sampled_from(SP_DEGREES), tp=st.sampled_from([1, 2]))
+def test_sp_delta_is_exactly_the_sequence_resident_terms(b, s16, sp, tp):
+    """AC-None: sp=1 minus sp=k equals the shrink of exactly the paper's
+    /sp terms — 5bsh for MLA (4bsh input + bsh output-grad buffer), 3bsh
+    for GQA, 2bsh for dense MLP, 4bsh for MoE.  Everything else (TP-shared
+    projections, s² scores, MLA latents, router activations, expert
+    buffers) contributes zero to the delta."""
+    s = 16 * s16
+    rc = RecomputePolicy.NONE
+    h = DS3.h
+    d = mla_activation_bytes(DS3, b, s, tp=tp, sp=1, cp=1, recompute=rc) \
+        - mla_activation_bytes(DS3, b, s, tp=tp, sp=sp, cp=1, recompute=rc)
+    assert d == (4 * b * s * h - 4 * b * s * h // sp) \
+        + (b * s * h - b * s * h // sp)
+
+    h = QWEN.h
+    d = gqa_activation_bytes(QWEN, b, s, tp=tp, sp=1, cp=1, recompute=rc) \
+        - gqa_activation_bytes(QWEN, b, s, tp=tp, sp=sp, cp=1, recompute=rc)
+    assert d == (2 * b * s * h - 2 * b * s * h // sp) \
+        + (b * s * h - b * s * h // sp)
+
+    d = dense_mlp_activation_bytes(QWEN, b, s, tp=tp, sp=1, cp=1,
+                                   recompute=rc) \
+        - dense_mlp_activation_bytes(QWEN, b, s, tp=tp, sp=sp, cp=1,
+                                     recompute=rc)
+    assert d == 2 * b * s * QWEN.h - 2 * b * s * QWEN.h // sp
+
+    h = DS3.h
+    d = moe_activation_bytes(DS3, b, s, sp=1, cp=1, ep=1, recompute=rc) \
+        - moe_activation_bytes(DS3, b, s, sp=sp, cp=1, ep=1, recompute=rc)
+    assert d == 4 * b * s * h - 4 * b * s * h // sp
+
+
+@settings(max_examples=40, deadline=None)
+@given(b=st.integers(1, 4), s16=st.integers(1, 128),
+       sp=st.sampled_from([2, 4, 8]), scale=st.sampled_from([2, 3, 4]))
+def test_mla_latent_terms_sp_invariant(b, s16, sp, scale):
+    """The replicated 2bs(d_cq+d_c) latents carry no /sp divisor: scaling
+    the latent dims moves absolute bytes but not the sp delta."""
+    s = 16 * s16
+    big = dataclasses.replace(
+        DS3, mla=dataclasses.replace(DS3.mla, d_cq=DS3.mla.d_cq * scale,
+                                     d_c=DS3.mla.d_c * scale))
+    kw = dict(tp=2, cp=1, recompute=RecomputePolicy.NONE)
+    d_small = mla_activation_bytes(DS3, b, s, sp=1, **kw) \
+        - mla_activation_bytes(DS3, b, s, sp=sp, **kw)
+    d_big = mla_activation_bytes(big, b, s, sp=1, **kw) \
+        - mla_activation_bytes(big, b, s, sp=sp, **kw)
+    assert d_small == d_big
+    assert mla_activation_bytes(big, b, s, sp=sp, **kw) \
+        > mla_activation_bytes(DS3, b, s, sp=sp, **kw)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tp=st.sampled_from([1, 2]), b=st.sampled_from([1, 2, 4]),
+       z=st.sampled_from(list(ZeROStage)),
+       rc=st.sampled_from(list(RecomputePolicy)))
+def test_estimate_memory_sp_never_grows(tp, b, z, rc):
+    """End-to-end: flipping the ParallelConfig sp knob on (degree = tp)
+    never increases the activation estimate, and state bytes don't move
+    (SP re-shards activations only)."""
+    def cfg(sp):
+        return ParallelConfig(dp=4, tp=tp, pp=2, ep=1, etp=1, sp=sp,
+                              zero=z, recompute=rc, micro_batch=b,
+                              seq_len=4096)
+    on = estimate_memory(DS3, cfg(True), stage=0)
+    off = estimate_memory(DS3, cfg(False), stage=0)
+    assert on.activations <= off.activations
+    if tp > 1 and rc != RecomputePolicy.FULL:
+        assert on.activations < off.activations
+    assert (on.params, on.grads, on.optimizer) \
+        == (off.params, off.grads, off.optimizer)
+
+
+def test_indivisible_sp_warns_and_falls_back():
+    """s % sp != 0 used to floor-divide silently (under-counting); now it
+    warns and models the tensor as SP-replicated — the same loud-fallback
+    contract as the TP guards."""
+    b, s = 2, 1023
+    with pytest.warns(RuntimeWarning, match="sp=2 does not divide"):
+        got = gqa_activation_bytes(QWEN, b, s, tp=1, sp=2, cp=1,
+                                   recompute=RecomputePolicy.NONE)
+    assert got == gqa_activation_bytes(QWEN, b, s, tp=1, sp=1, cp=1,
+                                       recompute=RecomputePolicy.NONE)
+    with pytest.warns(RuntimeWarning, match="sp=2"):
+        full = mla_activation_bytes(DS3, b, s, tp=1, sp=2, cp=1,
+                                    recompute=RecomputePolicy.FULL)
+    assert full == 2 * b * s * DS3.h
+
+
+def test_sp_violations_listed_and_executor_rejects():
+    """tp_violations grows the sp/seq_len axis; the executor's hard guard
+    (parallel.tp.check_sp_supported) raises on it, and the planner marks
+    such configs not runnable."""
+    from repro.core import executor_runnable
+    assert tp_violations(QWEN, 2, sp=2, seq_len=4096) == []
+    bad = tp_violations(QWEN, 2, sp=2, seq_len=4097)
+    assert any("s=4097" in x for x in bad)
+    # sp violation is reported even at tp degrees that divide everything
+    assert tp_violations(QWEN, 1, sp=2, seq_len=4097)
+
+    tp_mod = pytest.importorskip("repro.parallel.tp")
+    with pytest.raises(ValueError, match="s=4097"):
+        tp_mod.check_sp_supported(QWEN, 2, 4097)
+    with pytest.raises(ValueError, match="ties its degree"):
+        tp_mod.check_sp_supported(QWEN, 1, 4096)
+
+    cfg = ParallelConfig(dp=4, tp=2, pp=1, sp=True, seq_len=4097)
+    ok, why = executor_runnable(QWEN, cfg)
+    assert not ok and "s=4097" in why
+    ok, why = executor_runnable(
+        QWEN, dataclasses.replace(cfg, seq_len=4096))
+    assert ok, why
