@@ -158,9 +158,35 @@ def _parse_sp_tag(rec: Dict[str, Any], path: Optional[str] = None) -> int:
         return 1     # unparseable mesh tag: claim no divisor, don't fabricate
 
 
+def _parse_ep_tag(rec: Dict[str, Any], path: Optional[str] = None) -> int:
+    """EP degree of a ``--pp`` artifact: the explicit ``ep`` field on new
+    records, else the ``__ep<N>`` tag component, else the legacy default —
+    older artifacts were analysed with ``ep = min(tp, n_routed)`` for MoE
+    archs (1 for dense), so their rows keep the divisor their analytic
+    columns actually used."""
+    if "ep" in rec:
+        return int(rec["ep"])
+    if path:
+        import re
+        m = re.search(r"__ep(\d+)", os.path.basename(path))
+        if m:
+            return int(m.group(1))
+    try:
+        from repro.configs import get_spec
+        spec = get_spec(rec["arch"])
+        if spec.is_moe:
+            tp = int(rec["tp"]) if "tp" in rec \
+                else _parse_mesh_tag(rec["mesh"])[2]
+            return min(tp, spec.moe.n_routed)
+    except Exception:
+        pass
+    return 1
+
+
 def validate_pp(arch: str, shape: str, pp: int,
                 mesh_tag: str = "pod16x16", schedule: str = "1f1b",
                 n_chunks: int = 1, zero: str = "os+g", sp: int = 1,
+                ep: Optional[int] = None,
                 tag_suffix: str = "") -> Optional[Dict[str, Any]]:
     """Per-rank validation of a ``dryrun --pp N [--schedule ...]`` artifact:
     XLA's per-rank temp bytes (activations + grads + transients of the rank
@@ -178,9 +204,10 @@ def validate_pp(arch: str, shape: str, pp: int,
     sched_tag = "" if schedule == "1f1b" else f"__{schedule}{n_chunks}"
     zero_tag = "" if zero == "os+g" else f"__z{zero.replace('+', '')}"
     sp_tag = "" if sp == 1 else f"__sp{sp}"
+    ep_tag = "" if ep is None else f"__ep{ep}"
     path = os.path.join(
         DRY, f"{arch}__{shape}__{mesh_tag}__pp{pp}{sched_tag}{zero_tag}"
-             f"{sp_tag}{tag_suffix}.json")
+             f"{sp_tag}{ep_tag}{tag_suffix}.json")
     if not os.path.exists(path):
         return None
     with open(path) as f:
@@ -194,10 +221,11 @@ def _validate_pp_rec(rec: Dict[str, Any],
     mesh_tag = rec["mesh"]
     schedule = rec.get("schedule", "1f1b")
     sp = _parse_sp_tag(rec, path)
+    ep = _parse_ep_tag(rec, path)
     if rec.get("status") != "ok":
         return {"arch": arch, "shape": shape, "pp": pp,
                 "schedule": schedule, "n_chunks": rec.get("n_chunks", 1),
-                "tp": rec.get("tp"), "sp": sp,
+                "tp": rec.get("tp"), "sp": sp, "ep": ep,
                 "zero": rec.get("zero",
                                 rec.get("options", {}).get("zero", "os+g")),
                 "recompute": rec.get("options", {}).get("recompute", "none"),
@@ -237,7 +265,7 @@ def _validate_pp_rec(rec: Dict[str, Any],
     return {
         "arch": arch, "shape": shape, "pp": pp, "status": "ok",
         "schedule": schedule, "n_chunks": rec.get("n_chunks", 1),
-        "tp": rec.get("tp", model_ax), "sp": sp,
+        "tp": rec.get("tp", model_ax), "sp": sp, "ep": ep,
         "zero": rec.get("zero", rec.get("options", {}).get("zero", "os+g")),
         "recompute": rec.get("options", {}).get("recompute", "none"),
         "n_micro": n_micro,
@@ -257,13 +285,13 @@ def _validate_pp_rec(rec: Dict[str, Any],
 
 def _pp_artifacts() -> List[Dict[str, Any]]:
     """One validation row per distinct (arch, shape, pp, schedule, n_chunks,
-    tp, zero, sp, n_micro) configuration.  Artifacts are deduped on that
-    key — re-runs under a different tag suffix (e.g. legacy ``__nm8`` files
-    next to fresh defaults) previously appended duplicate rows to
-    validation_pp.json; now the newest artifact (mtime) wins.  ``sp`` comes
-    from the record or the ``__sp<N>`` tag (``_parse_sp_tag``), so sp=1 and
-    sp=tp probes of the same mesh coexist as separate rows — the pair the
-    /sp-divisor acceptance check compares."""
+    tp, zero, sp, ep, n_micro) configuration.  Artifacts are deduped on
+    that key — re-runs under a different tag suffix (e.g. legacy ``__nm8``
+    files next to fresh defaults) previously appended duplicate rows to
+    validation_pp.json; now the newest artifact (mtime) wins.  ``sp``/``ep``
+    come from the record or the ``__sp<N>``/``__ep<N>`` tags, so sp (ep) =1
+    and =tp probes of the same mesh coexist as separate rows — the pairs
+    the /sp- and /ep-divisor acceptance checks compare."""
     import glob
     by_key: Dict[Any, Dict[str, Any]] = {}
     paths = sorted(glob.glob(os.path.join(DRY, "*__pp*.json")),
@@ -276,8 +304,8 @@ def _pp_artifacts() -> List[Dict[str, Any]]:
         row = _validate_pp_rec(rec, p)
         key = (row.get("arch"), row.get("shape"), row.get("pp"),
                row.get("schedule"), row.get("n_chunks"), row.get("tp"),
-               row.get("zero"), row.get("sp"), row.get("recompute"),
-               row.get("n_micro"))
+               row.get("zero"), row.get("sp"), row.get("ep"),
+               row.get("recompute"), row.get("n_micro"))
         by_key[key] = row            # newest artifact wins
     return [by_key[k] for k in sorted(by_key, key=lambda k: tuple(map(str, k)))]
 
@@ -314,21 +342,23 @@ def main():
         with open(os.path.join(ART, "validation_pp.json"), "w") as f:
             json.dump(pp_rows, f, indent=1)
         print("\n## Per-rank schedule residency (dryrun --pp [--tp --zero "
-              "--sp --schedule]) vs estimate_memory(stage=r, schedule=...)")
-        print("| arch | shape | pp | tp | zero | sp | ac | schedule |"
+              "--sp --ep --schedule]) vs estimate_memory(stage=r, "
+              "schedule=...)")
+        print("| arch | shape | pp | tp | zero | sp | ep | ac | schedule |"
               " n_micro | rank0/last XLA (logits-adj) |"
               " rank0/last analytic act | direction |")
-        print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+        print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
         for r in pp_rows:
             if r.get("status") != "ok":
                 print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
                       f" {r.get('tp', '-')} | {r.get('zero', '-')} |"
-                      f" {r.get('sp', '-')} | {r.get('recompute', '-')} |"
+                      f" {r.get('sp', '-')} | {r.get('ep', '-')} |"
+                      f" {r.get('recompute', '-')} |"
                       f" {r.get('schedule', '1f1b')} | - | - | - |"
                       f" {r.get('status')} |")
                 continue
             print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
-                  f" {r['tp']} | {r['zero']} | {r['sp']} |"
+                  f" {r['tp']} | {r['zero']} | {r['sp']} | {r['ep']} |"
                   f" {r['recompute']} |"
                   f" {r['schedule']} | {r['n_micro']} |"
                   f" {r['measured_ratio_stage0_over_last']:.2f} |"

@@ -28,6 +28,9 @@ ARCHS: List[str] = [
     "qwen3_moe_235b_a22b",
     "gemma_7b",
     "qwen2_1_5b",
+    # beyond the assigned pool: the small "qwen2-moe"-shaped probe arch the
+    # EP dispatch-buffer validation pair runs on (dryrun --pp --tp --ep)
+    "qwen2_moe_a2_7b",
 ]
 
 # assigned pool ids (dashes) -> module names (underscores)
@@ -45,6 +48,7 @@ _ALIASES.update({
     "qwen2-1.5b": "qwen2_1_5b",
     "deepseek-v3": "deepseek_v3",
     "deepseek-v2": "deepseek_v2",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
 })
 
 ASSIGNED: List[str] = [

@@ -1,0 +1,51 @@
+"""Qwen1.5-MoE-A2.7B [arXiv:2407.10671 §2; HF ``qwen2_moe``] — 24L
+d_model=2048 16H (MHA kv=16, qkv bias), vocab 151936; MoE 60 experts top-4
+with a 4×-wide always-on shared expert (shared_expert_intermediate 5632 =
+4 × moe_intermediate 1408), every layer MoE.
+
+The repo's "qwen2-moe-shaped" probe arch: small enough to compile per-rank
+dry-run programs quickly, yet it exercises every EP-relevant feature at
+once — many routed experts (60, divisible by small TP degrees), a shared
+expert on the ETP path, and softmax top-k routing — which is why the
+``dryrun --pp --tp --ep`` dispatch-buffer validation pair runs on it.
+"""
+
+from repro.core.notation import (AttentionKind, FamilyKind, MlpKind, MoESpec,
+                                 ModelSpec)
+
+SPEC = ModelSpec(
+    name="qwen2-moe-a2.7b",
+    family=FamilyKind.MOE,
+    n_layers=24,
+    h=2048,
+    n_h=16,
+    n_kv=16,
+    d_head=128,
+    h_ff=0,                      # every layer is MoE
+    vocab=151936,
+    attention=AttentionKind.MHA,
+    mlp=MlpKind.SWIGLU,
+    moe=MoESpec(n_routed=60, n_active=4, n_shared=4, d_ff_expert=1408,
+                first_k_dense=0),
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    max_seq_len=8192,
+)
+
+SMOKE = ModelSpec(
+    name="qwen2-moe-smoke",
+    family=FamilyKind.MOE,
+    n_layers=2,
+    h=256,
+    n_h=4,
+    n_kv=4,
+    d_head=64,
+    h_ff=0,
+    vocab=512,
+    attention=AttentionKind.MHA,
+    mlp=MlpKind.SWIGLU,
+    moe=MoESpec(n_routed=4, n_active=2, n_shared=1, d_ff_expert=128,
+                first_k_dense=0),
+    qkv_bias=True,
+    max_seq_len=512,
+)

@@ -261,21 +261,27 @@ class ModelSpec:
 
 
 def tp_violations(spec: "ModelSpec", tp: int, *, sp: int = 1,
-                  seq_len: Optional[int] = None):
+                  seq_len: Optional[int] = None, ep: int = 1):
     """Dims a TP degree fails to divide exactly, as human-readable strings
     (empty list = cleanly divisible).  Shared by the analytic guard
     (``core.activations``), the planner's runnable marking and the
     executor's hard checks (``parallel.tp.check_tp_supported`` /
-    ``check_sp_supported``).
+    ``check_sp_supported`` / ``check_ep_supported``).
 
     ``sp``/``seq_len`` extend the check to sequence parallelism: SP shards
     the token dim, so ``seq_len % sp`` must be 0 (the executor's boundary
     all-gather/reduce-scatter pair has no replicate-fallback; the analytic
     model falls back to SP-replicated accounting with a RuntimeWarning —
-    ``core.activations._seq_shard_or_warn``)."""
+    ``core.activations._seq_shard_or_warn``).
+
+    ``ep`` extends it to expert parallelism: the expert-dim weight shard
+    requires ``n_routed % ep == 0`` (the analytic fallback is
+    EP-replicated accounting — ``core.activations._shard_or_warn``)."""
     bad = []
     if sp > 1 and seq_len is not None and seq_len % sp:
         bad.append(f"s={seq_len} (sp={sp})")
+    if ep > 1 and spec.is_moe and spec.moe.n_routed % ep:
+        bad.append(f"n_routed={spec.moe.n_routed} (ep={ep})")
     if tp <= 1:
         return bad
     if spec.attention != AttentionKind.NONE and spec.n_h % tp:

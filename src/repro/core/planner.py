@@ -66,8 +66,11 @@ def executor_runnable(spec: ModelSpec, cfg: ParallelConfig, *,
     required), Megatron-style sequence parallelism (degree tied to tp —
     ``make_pipeline_train_step(..., sp=True)``; the seq-sharded boundary
     requires ``seq_len % tp == 0``), ZeRO os / os+g via sharding
-    constraints, and ETP-style MoE (all experts on every shard, expert-ff
-    sharded) — so EP placement, ZeRO-3 parameter partitioning, context
+    constraints, and MoE either ETP-style (ep=1: all experts on every
+    shard, expert-ff sharded) or true expert-parallel
+    (``make_pipeline_train_step(..., ep=tp)``: expert-dim weight shards +
+    a2a token dispatch over 'model') — so grouped EP off the 'model' axis
+    (1 < ep < tp or ep ∤ devices), ZeRO-3 parameter partitioning, context
     parallelism and the recurrent / enc-dec / VLM families remain analytic
     or GSPMD-dry-run territory."""
     if spec.ssm is not None:
@@ -78,13 +81,23 @@ def executor_runnable(spec: ModelSpec, cfg: ParallelConfig, *,
         return False, "VLM frontend (pipeline runtime unsupported)"
     if spec.attention == AttentionKind.NONE:
         return False, "attention-free family (pipeline runtime unsupported)"
-    bad = tp_violations(spec, cfg.tp, sp=cfg.sp_degree, seq_len=cfg.seq_len)
+    bad = tp_violations(spec, cfg.tp, sp=cfg.sp_degree, seq_len=cfg.seq_len,
+                        ep=cfg.ep)
     if bad:
         return False, f"indivisible parallel degrees: {', '.join(bad)}"
     if cfg.cp > 1:
         return False, "context parallelism not executed"
     if spec.is_moe and cfg.ep > 1:
-        return False, "EP placement is dry-run-only (executor uses ETP)"
+        # executor EP: a2a dispatch group == the whole 'model' axis, so
+        # only ep == tp runs; the wider enumeration space (any ep dividing
+        # dp*tp) stays estimator-only with the reason recorded here
+        if cfg.ep != cfg.tp:
+            return False, (f"executor EP ties the a2a dispatch group to the "
+                           f"'model' axis (ep == tp); ep={cfg.ep} with "
+                           f"tp={cfg.tp} is estimator-only")
+        if (cfg.micro_batch * cfg.seq_len) % cfg.ep:
+            return False, (f"ep={cfg.ep} does not divide the per-rank token "
+                           f"count {cfg.micro_batch * cfg.seq_len}")
     if cfg.etp not in (1, cfg.tp):
         return False, f"executor ties ETP to TP (etp={cfg.etp}, tp={cfg.tp})"
     if cfg.zero == ZeROStage.OS_G_PARAMS:

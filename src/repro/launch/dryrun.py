@@ -26,16 +26,23 @@ just its 'model' axis (so ``--pp --tp --zero`` compose into joint 3D+ZeRO
 probes on small fake meshes); ``--sp N`` (N = the TP degree) additionally
 shards the probe's boundary/residual sequence dims over 'model' and sets
 the analytic sp divisor — the measurement side of the executor's Megatron
-sequence parallelism.  With ``--pp N`` (> 1) each pipeline rank is
+sequence parallelism; ``--ep N`` (MoE archs, N = 1 or the TP degree) pins
+the expert placement on both sides — N>1 shards expert weights on their
+expert dim over 'model' (the executor's EP layout) and sets the analytic
+ep divisor, N=1 pins the ETP layout — so an ``__ep1``/``__ep2`` artifact
+pair measures the (E/ep, C, h) dispatch-buffer shrink.  With ``--pp N``
+(> 1) each pipeline rank is
 compiled as its own program holding the schedule's in-flight microbatch
 counts (``--schedule {1f1b,interleaved,dualpipe}``, ``--pp-chunks`` virtual
 stages per rank) next to ``estimate_memory(stage=r, schedule=...)`` — the
 measurement side of ``docs/pipeline-schedules.md``.
 
 Artifacts: one JSON per combo in ``benchmarks/artifacts/dryrun/<tag>.json``
-(tag = arch__shape__mesh[__ppN[__<schedule><v>]][__z<zero>][__sp<N>][suffix];
+(tag =
+arch__shape__mesh[__ppN[__<schedule><v>]][__z<zero>][__sp<N>][__ep<N>][suffix];
 the mesh component encodes tp, the ``__z`` component appears for
-non-default ``--zero``, ``__sp`` for ``--sp`` > 1) with status,
+non-default ``--zero``, ``__sp`` for ``--sp`` > 1, ``__ep`` whenever
+``--ep`` is explicit) with status,
 lower/compile wall-times, ``memory_analysis`` fields, flops/bytes from
 ``cost_analysis``, per-collective HLO byte counts (plain runs) or the
 per-rank records (``--pp`` runs: layers, per-chunk in-flight, memory,
@@ -336,6 +343,7 @@ def _make_rank_probe(spec, opts, chunks, firsts, lasts, in_flight):
 def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
            force: bool = False, tag_suffix: str = "", mesh_shape=None,
            schedule: str = "1f1b", n_chunks: int = 1, sp: int = 1,
+           ep: Optional[int] = None,
            **build_kw) -> Dict[str, Any]:
     """--pp N [--schedule ...]: lower + compile each pipeline rank as its
     own program on the rank's (data/pp, model) sub-mesh and record per-rank
@@ -369,8 +377,16 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
         raise ValueError(f"--sp must be 1 or the TP degree {model_ax} "
                          f"(Megatron SP ties sp to tp), got {sp}")
     sp_tag = "" if sp == 1 else f"__sp{sp}"
+    # --ep: explicit EP degree.  None keeps the legacy behaviour (analytic
+    # ep = min(tp, n_routed), measured layout = the DEFAULT_RULES expert
+    # shard) under the legacy untagged artifact name; an explicit value
+    # pins BOTH sides — ep>1 shards the expert dim over 'model' (full axis,
+    # like the executor's a2a layout), ep=1 pins the ETP layout (expert-ff
+    # over 'model', experts replicated) — so an __ep1/__ep2 artifact pair
+    # isolates exactly the dispatch-buffer /ep shrink.
+    ep_tag = "" if ep is None else f"__ep{ep}"
     tag = (f"{arch}__{shape_name}__{mesh_tag}__pp{pp}{sched_tag}{zero_tag}"
-           f"{sp_tag}{tag_suffix}")
+           f"{sp_tag}{ep_tag}{tag_suffix}")
     path = os.path.join(ART_DIR, tag + ".json")
     if os.path.exists(path) and not force:
         with open(path) as f:
@@ -381,6 +397,8 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
                            "schedule": schedule, "n_chunks": v,
                            "tp": model_ax, "zero": zero, "sp": sp,
                            "mesh": mesh_tag, "options": build_kw}
+    if ep is not None:
+        rec["ep"] = ep
     try:
         if info["kind"] != "train":
             raise NotImplementedError("--pp covers training shapes only "
@@ -402,9 +420,23 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
         dp = (data // pp) * (2 if multi_pod else 1)
         b_micro = max(info["batch"] // n_micro, 1)
         n_exp = spec.moe.n_routed if spec.is_moe else None
-        ep = min(model_ax, n_exp) if n_exp else 1
+        if ep is None:                  # legacy: analytic ep follows the mesh
+            ep_eff = min(model_ax, n_exp) if n_exp else 1
+        else:
+            if not spec.is_moe:
+                raise ValueError(f"--ep needs an MoE arch, {arch} is dense")
+            if ep not in (1, model_ax):
+                raise ValueError(
+                    f"--ep must be 1 or the TP degree {model_ax} (the "
+                    f"expert-dim shard spans the whole 'model' axis, like "
+                    f"the executor's a2a group), got {ep}")
+            if n_exp % ep:
+                raise ValueError(f"--ep {ep} does not divide "
+                                 f"n_routed={n_exp}")
+            ep_eff = ep
+        rec["ep"] = ep_eff
         cfg = ParallelConfig(
-            dp=dp, tp=model_ax, pp=pp, ep=ep, etp=1, sp=sp > 1,
+            dp=dp, tp=model_ax, pp=pp, ep=ep_eff, etp=1, sp=sp > 1,
             zero=ZeROStage(build_kw.get("zero", "os+g")),
             recompute=RecomputePolicy(build_kw.get("recompute", "none")),
             micro_batch=max(b_micro // dp, 1), seq_len=info["seq"])
@@ -415,9 +447,19 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
         stages = []
         # --sp: route the logical "seq" axis onto 'model' so the probe's
         # boundary/residual constraints shard the sequence — the measured
-        # counterpart of the analytic /sp divisor
-        sp_rules = {"seq": "model"} if sp > 1 else None
-        with axis_rules(mesh, sp_rules):
+        # counterpart of the analytic /sp divisor.  --ep: pin the expert
+        # rules to the probed placement (ep>1: expert dim over 'model',
+        # full ff — the executor's EP layout; ep=1: the ETP layout) so the
+        # __ep pair's measured dispatch-buffer bytes track the analytic
+        # (E/ep, C, h) term.
+        probe_rules: Dict[str, Any] = {}
+        if sp > 1:
+            probe_rules["seq"] = "model"
+        if ep is not None:
+            probe_rules.update({"expert": "model", "expert_ff": None}
+                               if ep > 1 else
+                               {"expert": None, "expert_ff": "model"})
+        with axis_rules(mesh, probe_rules or None):
             for r in range(pp):
                 chunks = all_chunks[r]
                 placed = sched.placement[r]
@@ -446,7 +488,8 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
                                 (k, b_micro, info["seq"]), jnp.int32))
                 probe = _make_rank_probe(spec, opts, chunks, firsts, lasts,
                                          list(ks))
-                st_sh = state_shardings(abstract_state, mesh, cfg.zero)
+                st_sh = state_shardings(abstract_state, mesh, cfg.zero,
+                                        rules=probe_rules or None)
                 in_sh = _stage_input_shardings(mesh, arrs, sp=sp)
                 t0 = time.perf_counter()
                 compiled = jax.jit(
@@ -573,6 +616,16 @@ def main() -> int:
                          "shards the probe's boundary/residual seq dims "
                          "over 'model', tags the artifact __sp<N> and sets "
                          "the analytic sp divisor")
+    ap.add_argument("--ep", type=int, default=None,
+                    help="expert-parallel degree for --pp probes on MoE "
+                         "archs (1 or the TP degree — the expert shard "
+                         "spans the whole 'model' axis, like the "
+                         "executor's a2a group): >1 shards expert weights "
+                         "on their expert dim (full ff), 1 pins the ETP "
+                         "layout; tags the artifact __ep<N> and sets the "
+                         "analytic ep divisor — run the __ep1/__ep2 pair "
+                         "to measure the (E/ep, C, h) dispatch-buffer "
+                         "shrink")
     ap.add_argument("--schedule", default="1f1b",
                     choices=["1f1b", "interleaved", "dualpipe"],
                     help="pipeline schedule for --pp probes: sets per-rank "
@@ -611,6 +664,8 @@ def main() -> int:
         ap.error("--sp applies to the per-rank --pp probes; pass --pp N "
                  "(the plain-probe path would silently measure replicated "
                  "sequence dims under an __sp tagless artifact)")
+    if args.ep is not None and args.pp <= 1:
+        ap.error("--ep applies to the per-rank --pp probes; pass --pp N")
     failures = 0
     n_chunks = args.pp_chunks if args.pp_chunks is not None \
         else (1 if args.schedule == "1f1b" else 2)
@@ -619,7 +674,8 @@ def main() -> int:
             rec = run_pp(a, s, args.pp, multi_pod=args.multi_pod,
                          force=args.force, tag_suffix=args.tag_suffix,
                          mesh_shape=mesh_shape, schedule=args.schedule,
-                         n_chunks=n_chunks, sp=args.sp, **build_kw)
+                         n_chunks=n_chunks, sp=args.sp, ep=args.ep,
+                         **build_kw)
         else:
             rec = run_one(a, s, multi_pod=args.multi_pod, force=args.force,
                           tag_suffix=args.tag_suffix, mesh_shape=mesh_shape,

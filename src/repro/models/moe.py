@@ -25,7 +25,12 @@ from .layers import Params, dense_init, mlp_apply, mlp_init
 class MoEOutput(NamedTuple):
     y: jnp.ndarray
     aux_loss: jnp.ndarray       # load-balance auxiliary loss
-    router_probs: jnp.ndarray   # (T, E) fp32 (paper keeps 4bsN router acts)
+    # (T, E) fp32 normalised router probabilities (paper keeps 4bsN router
+    # acts).  T is the *routed* token set: the full batch on the replicated
+    # paths, the rank's own disjoint token chunk inside token-sharded
+    # executors (SP and/or EP) — consumers wanting global stats must gather
+    # over the token-sharding axis.
+    router_probs: jnp.ndarray
 
 
 def moe_init(key: jax.Array, spec: ModelSpec, dtype=jnp.bfloat16) -> Params:
@@ -43,6 +48,43 @@ def moe_init(key: jax.Array, spec: ModelSpec, dtype=jnp.bfloat16) -> Params:
     if e.n_shared:
         p["shared"] = mlp_init(ks, spec, f * e.n_shared, dtype)
     return p
+
+
+def _route(router_w: jnp.ndarray, spec: ModelSpec, xt: jnp.ndarray,
+           router_impl: str) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Route flat tokens (T, h) -> (probs (T, E) fp32, gates (T, K) fp32,
+    eids (T, K) int32).  DeepSeek-v3 sigmoid scoring + top-k renorm, or
+    classic top-k softmax (OLMoE/Qwen3).  Shared by the scatter, EP-a2a and
+    GSPMD-a2a dispatch paths so routing can never drift between them."""
+    e = spec.moe
+    logits = xt.astype(jnp.float32) @ router_w
+    if router_impl == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        gate_vals, eids = jax.lax.top_k(scores, e.n_active)
+        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-20)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_vals, eids = jax.lax.top_k(probs, e.n_active)
+        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
+    return probs, gates, eids
+
+
+def _send_eid_buffer(dest: jnp.ndarray, pos: jnp.ndarray,
+                     local_eid: jnp.ndarray, n_dest: int, c_send: int,
+                     e_loc: int) -> jnp.ndarray:
+    """(n_dest, c_send) int32 buffer of local expert ids for the a2a send
+    step; slots no kept assignment wrote carry ``e_loc``, the padding
+    marker the receiver masks on.  ``pos`` is the UNCLAMPED rank of each
+    assignment within its destination bucket: out-of-capacity assignments
+    index past ``c_send`` and the scatter drops them (``mode="drop"``).
+    Clamping them to ``c_send - 1`` instead — and writing the marker there
+    — collided with the slot's real write (scatter-set with duplicate
+    indices keeps an arbitrary one), so on bucket overflow a *kept*
+    token's expert id could be overwritten by the marker and its expert
+    output silently zeroed."""
+    return jnp.full((n_dest, c_send), e_loc, jnp.int32) \
+        .at[dest, pos].set(local_eid, mode="drop")
 
 
 def _positions_in_expert(eids: jnp.ndarray, n_expert: int
@@ -69,7 +111,9 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
                 capacity_factor: float = 1.25,
                 router_impl: str = "softmax",
                 tp_f=None, tp_g=None,
-                sp_axis: Optional[str] = None) -> MoEOutput:
+                sp_axis: Optional[str] = None,
+                ep: int = 1,
+                ep_axis: Optional[str] = None) -> MoEOutput:
     """x: (b, s, h) -> (b, s, h).
 
     DeepSeek-v3 uses sigmoid scoring + top-k renormalisation; classic top-k
@@ -93,23 +137,37 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
     the aux product — per-shard token sets are disjoint and equal-sized,
     so the combined aux equals the sp=1 value exactly; the resulting
     seq-partial router gradient is completed by the executor's post-loop
-    'model'-axis psum."""
+    'model'-axis psum.
+
+    ``ep``/``ep_axis`` (paper §3.3) switch the routed experts to true
+    expert parallelism over ``ep_axis`` (the executor's 'model' axis,
+    ``ep`` == its size): expert weights arrive sharded on their *expert*
+    dim (``(E/ep, h, h_E)`` per rank, full hidden), each rank routes its
+    own disjoint token chunk — the seq shard under SP, an explicit
+    ``shard_tokens_ep`` slice of the replicated residual otherwise — and
+    the dispatch is :func:`_moe_dispatch_ep`'s send-bucket / all-to-all /
+    local grouped FFN / all-to-all-back exchange.  The shared expert stays
+    on the ETP path (``tp_f``/``tp_g``, every token), and the router —
+    consumed inside the token-sharded region — accumulates token-partial
+    gradients the executor completes with its post-loop 'model' psum
+    (the same completion SP already requires)."""
     e = spec.moe
     b, s, h = x.shape
     T = b * s
     E, K = e.n_routed, e.n_active
     xt = x.reshape(T, h)
 
-    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E) fp32
-    if router_impl == "sigmoid":
-        scores = jax.nn.sigmoid(logits)
-        gate_vals, eids = jax.lax.top_k(scores, K)
-        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
-        probs = scores / (scores.sum(-1, keepdims=True) + 1e-20)
-    else:
-        probs = jax.nn.softmax(logits, axis=-1)
-        gate_vals, eids = jax.lax.top_k(probs, K)
-        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
+    if ep > 1:
+        if ep_axis is None:
+            raise ValueError("moe_forward: ep > 1 needs ep_axis (the mesh "
+                             "axis the a2a dispatch group lives on)")
+        if E % ep:
+            raise ValueError(f"ep={ep} does not divide n_routed={E}")
+        return _moe_forward_ep(p, spec, x, capacity_factor=capacity_factor,
+                               router_impl=router_impl, tp_f=tp_f, tp_g=tp_g,
+                               sp_axis=sp_axis, ep=ep, ep_axis=ep_axis)
+
+    probs, gates, eids = _route(p["router"], spec, xt, router_impl)
 
     # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
     me = jnp.mean(probs, axis=0)
@@ -149,6 +207,108 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
         xs = tp_f(xt) if tp_f is not None else xt
         ys = mlp_apply(p["shared"], spec, xs)
         y = y + (tp_g(ys) if tp_g is not None else ys)
+    return MoEOutput(y=y.reshape(b, s, h), aux_loss=aux, router_probs=probs)
+
+
+def _moe_forward_ep(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
+                    capacity_factor: float, router_impl: str,
+                    tp_f, tp_g, sp_axis: Optional[str],
+                    ep: int, ep_axis: str) -> MoEOutput:
+    """True expert parallelism inside the manual-collectives executor
+    (paper §3.3): weights sharded ``(E/ep, h, h_E)`` on the expert dim over
+    ``ep_axis``, token exchange via two ``lax.all_to_all``\\ s.
+
+    Per rank: route the rank's own disjoint token chunk (the seq shard
+    under SP; a ``shard_tokens_ep`` slice of the replicated residual
+    otherwise), bucket assignments by destination expert shard
+    (``dest = eid // (E/ep)``, capacity ``C_send = tk/ep·cf`` applied
+    *once*), a2a the ``(ep, C_send, h)`` send buffer, run the local
+    ``(E/ep, C, h)`` grouped FFN — ``C`` is the same global per-expert
+    capacity as ep=1, so the buffer is exactly the analytic ``/ep``
+    dispatch term — then a2a the outputs back and combine with the
+    locally-kept gates.  The router is consumed inside the token-sharded
+    region, so its local gradient is token-partial; the executor's
+    post-loop 'model' psum completes it (``train.pipeline_loop``)."""
+    from repro.parallel.tp import (pmean_sp, shard_tokens_ep,
+                                   unshard_tokens_ep)
+    e = spec.moe
+    b, s, h = x.shape
+    E, K = e.n_routed, e.n_active
+    E_loc = E // ep
+    xt_full = x.reshape(b * s, h)
+    if sp_axis is None:
+        if (b * s) % ep:
+            raise ValueError(
+                f"ep={ep} does not divide the per-rank token count "
+                f"{b * s}; the EP token slice has no pad fallback")
+        xt = shard_tokens_ep(xt_full, ep_axis, 0)
+    else:
+        xt = xt_full            # SP residual is already the token shard
+    t_loc = xt.shape[0]
+
+    probs, gates, eids = _route(p["router"], spec, xt, router_impl)
+    # per-chunk token sets are disjoint and equal-sized: the pmean of the
+    # per-chunk means is the exact global mean, so aux == the ep=1 value
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(eids, E, dtype=jnp.float32).sum(1)), axis=0) / K
+    me, ce = pmean_sp(me, ep_axis), pmean_sp(ce, ep_axis)
+    aux = E * jnp.sum(me * ce)
+
+    tk = t_loc * K
+    flat_eids = eids.reshape(tk)
+    flat_gates = gates.reshape(tk)
+    dest = flat_eids // E_loc
+    local_eid = flat_eids % E_loc
+
+    # send: bucket by destination shard, capacity_factor applied once here
+    c_send = int(max(1, round(tk / ep * capacity_factor)))
+    pos_d, _ = _positions_in_expert(dest, ep)
+    keep_s = pos_d < c_send
+    pos_dc = jnp.minimum(pos_d, c_send - 1)
+    src = jnp.repeat(xt, K, axis=0) * keep_s[:, None].astype(x.dtype)
+    send = jnp.zeros((ep, c_send, h), x.dtype).at[dest, pos_dc].add(src)
+    send_eid = _send_eid_buffer(dest, pos_d, local_eid, ep, c_send, E_loc)
+
+    recv = jax.lax.all_to_all(send, ep_axis, split_axis=0,
+                              concat_axis=0, tiled=False)
+    recv_eid = jax.lax.all_to_all(send_eid, ep_axis, split_axis=0,
+                                  concat_axis=0, tiled=False)
+
+    # local grouped FFN over the (E/ep, C, h) buffer; C = the global
+    # per-expert capacity (tk·ep assignments over E experts), NOT scaled
+    # by capacity_factor a second time
+    rows = recv.reshape(ep * c_send, h)
+    row_eid = recv_eid.reshape(ep * c_send)
+    pos_e, _ = _positions_in_expert(row_eid, E_loc + 1)
+    c_loc = int(max(1, round(tk * ep / E * capacity_factor)))
+    keep_e = (pos_e < c_loc) & (row_eid < E_loc)
+    pos_ec = jnp.minimum(pos_e, c_loc - 1)
+    eid_c = jnp.minimum(row_eid, E_loc - 1)
+    buf = jnp.zeros((E_loc, c_loc, h), x.dtype) \
+        .at[eid_c, pos_ec].add(rows * keep_e[:, None].astype(x.dtype))
+
+    a = jax.nn.silu(jnp.einsum("ech,ehf->ecf", buf, p["we_gate"]))
+    a = a * jnp.einsum("ech,ehf->ecf", buf, p["we_up"])
+    out_buf = jnp.einsum("ecf,efh->ech", a, p["we_down"])
+
+    back = (out_buf[eid_c, pos_ec] * keep_e[:, None].astype(x.dtype)) \
+        .reshape(ep, c_send, h)
+    ret = jax.lax.all_to_all(back, ep_axis, split_axis=0,
+                             concat_axis=0, tiled=False)
+
+    y_pairs = ret[dest, pos_dc] * (flat_gates * keep_s.astype(jnp.float32)
+                                   )[:, None].astype(x.dtype)
+    y = y_pairs.reshape(t_loc, K, h).sum(axis=1)
+    if sp_axis is None:
+        y = unshard_tokens_ep(y, ep_axis, 0)       # rejoin replicated stream
+
+    if e.n_shared:
+        # shared experts process every token and stay on the ETP path
+        xs = tp_f(xt_full) if tp_f is not None else xt_full
+        ys = mlp_apply(p["shared"], spec, xs)
+        y = y + (tp_g(ys) if tp_g is not None else ys)
+    # probs are the rank's token chunk only (documented: per-shard under EP)
     return MoEOutput(y=y.reshape(b, s, h), aux_loss=aux, router_probs=probs)
 
 

@@ -35,21 +35,19 @@ from jax.sharding import PartitionSpec as P
 from repro.core.notation import ModelSpec
 from repro.parallel.compat import shard_map
 from .layers import mlp_apply
-from .moe import MoEOutput, _positions_in_expert
+from .moe import (MoEOutput, _positions_in_expert, _route,
+                  _send_eid_buffer)
 
 
-def _route(params, spec, xt, router_impl):
-    logits = xt.astype(jnp.float32) @ params["router"]
-    if router_impl == "sigmoid":
-        scores = jax.nn.sigmoid(logits)
-        gate_vals, eids = jax.lax.top_k(scores, spec.moe.n_active)
-        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
-        probs = scores / (scores.sum(-1, keepdims=True) + 1e-20)
-    else:
-        probs = jax.nn.softmax(logits, axis=-1)
-        gate_vals, eids = jax.lax.top_k(probs, spec.moe.n_active)
-        gates = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-20)
-    return probs, gates, eids
+def local_expert_capacity(tk: int, e_loc: int, capacity_factor: float) -> int:
+    """Per-expert row capacity of the post-exchange ``(E_loc, C, h)``
+    buffer: each device receives (in balanced expectation) its row's
+    ``tk = t_loc·K`` assignments back, spread over its ``E_loc`` local
+    experts — ``capacity_factor`` applied ONCE.  This matches the
+    estimator's ``E_token·cf`` term (``core.activations.moe_activation
+    _bytes``); deriving it from the already-cf-scaled ``c_send`` instead
+    double-applied the factor (a ~cf× oversized buffer)."""
+    return max(1, int(round(tk / max(e_loc, 1) * capacity_factor)))
 
 
 def moe_forward_a2a(params, spec: ModelSpec, x: jnp.ndarray, *,
@@ -81,12 +79,13 @@ def moe_forward_a2a(params, spec: ModelSpec, x: jnp.ndarray, *,
                    "we_up": P("model", None, None),
                    "we_down": P("model", None, None)},
                   P(data_axes, "model", None)),
-        out_specs=(P(data_axes, "model", None), P()))
+        out_specs=(P(data_axes, "model", None), P(),
+                   P(data_axes, "model", None)))
     def dispatch(lp, xs):
         b_loc, s_loc, h = xs.shape
         t_loc = b_loc * s_loc
         xt = xs.reshape(t_loc, h)
-        probs, gates, eids = _route(lp, spec, xt, router_impl)
+        probs, gates, eids = _route(lp["router"], spec, xt, router_impl)
         me = jnp.mean(probs, axis=0)
         ce = jnp.mean(jax.nn.one_hot(eids, e.n_routed,
                                      dtype=jnp.float32).sum(1), axis=0) \
@@ -103,13 +102,14 @@ def moe_forward_a2a(params, spec: ModelSpec, x: jnp.ndarray, *,
         c_send = max(1, int(round(tk / M * capacity_factor)))
         pos_d, _ = _positions_in_expert(dest, M)
         keep_s = pos_d < c_send
-        pos_d = jnp.minimum(pos_d, c_send - 1)
+        pos_dc = jnp.minimum(pos_d, c_send - 1)
 
         src = jnp.repeat(xt, e.n_active, axis=0) \
             * keep_s[:, None].astype(xs.dtype)
-        send = jnp.zeros((M, c_send, h), xs.dtype).at[dest, pos_d].add(src)
-        send_eid = jnp.full((M, c_send), E_loc, jnp.int32) \
-            .at[dest, pos_d].set(jnp.where(keep_s, local_eid, E_loc))
+        send = jnp.zeros((M, c_send, h), xs.dtype).at[dest, pos_dc].add(src)
+        # unclamped pos_d: overflow writes drop instead of colliding with
+        # slot c_send-1's real expert id (see moe._send_eid_buffer)
+        send_eid = _send_eid_buffer(dest, pos_d, local_eid, M, c_send, E_loc)
 
         recv = jax.lax.all_to_all(send, "model", split_axis=0,
                                   concat_axis=0, tiled=False)
@@ -119,8 +119,7 @@ def moe_forward_a2a(params, spec: ModelSpec, x: jnp.ndarray, *,
         rows = recv.reshape(M * c_send, h)
         row_eid = recv_eid.reshape(M * c_send)
         pos_e, _ = _positions_in_expert(row_eid, E_loc + 1)
-        c_loc = max(1, int(round(M * c_send / max(E_loc, 1)
-                                 * capacity_factor)))
+        c_loc = local_expert_capacity(tk, E_loc, capacity_factor)
         keep_e = (pos_e < c_loc) & (row_eid < E_loc)
         pos_e = jnp.minimum(pos_e, c_loc - 1)
         eid_c = jnp.minimum(row_eid, E_loc - 1)
@@ -136,16 +135,19 @@ def moe_forward_a2a(params, spec: ModelSpec, x: jnp.ndarray, *,
         ret = jax.lax.all_to_all(back, "model", split_axis=0,
                                  concat_axis=0, tiled=False)
 
-        y_pairs = ret[dest, pos_d] * (flat_gates
+        y_pairs = ret[dest, pos_dc] * (flat_gates
                                       * keep_s.astype(xs.dtype))[:, None]
         y = y_pairs.reshape(t_loc, e.n_active, h).sum(axis=1)
-        return y.reshape(b_loc, s_loc, h), aux
+        # probs reshaped to the (b_loc, s_loc, E) layout so the out_spec
+        # reassembles the *global* (b, s, E) tensor — routing is per-token,
+        # so the assembled probs are exactly the scatter path's
+        return (y.reshape(b_loc, s_loc, h), aux,
+                probs.reshape(b_loc, s_loc, e.n_routed))
 
-    y, aux = dispatch(lparams, x)
+    y, aux, probs = dispatch(lparams, x)
     if e.n_shared:
         b, s, h = x.shape
         y = y + mlp_apply(params["shared"], spec, x.reshape(-1, h)) \
             .reshape(b, s, h)
-    # router_probs omitted in a2a mode (kept local); return zeros-shaped stub
     return MoEOutput(y=y, aux_loss=aux,
-                     router_probs=jnp.zeros((1, e.n_routed), jnp.float32))
+                     router_probs=probs.reshape(-1, e.n_routed))

@@ -397,7 +397,8 @@ def unstack_pipeline_grads(gstack: PyTree, params: PyTree, spec: ModelSpec,
 def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
                 x: jnp.ndarray, positions: jnp.ndarray, mask: jnp.ndarray,
                 moe_flag: jnp.ndarray, tp_axis: Optional[str] = None,
-                sp: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                sp: bool = False, ep: int = 1
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """One union layer slot.  ``mask`` (scalar f32) turns pad slots into the
     identity; ``moe_flag`` selects the MoE vs dense-MLP branch when the model
     mixes kinds (only the selected branch receives gradient).
@@ -415,7 +416,14 @@ def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
     the full sequence on entry to each TP region and ``scatter_to_sp``
     reduce-scatters block outputs back onto the shard.  The sharded token
     dim is always the second-to-last (the residual's seq, the MoE dispatch
-    buffer's capacity, flat-token rows), hence ``ndim - 2`` below."""
+    buffer's capacity, flat-token rows), hence ``ndim - 2`` below.
+
+    ``ep`` (> 1 ⇒ == tp) switches the MoE branch to true expert
+    parallelism over ``tp_axis``: routed expert weights arrive sharded on
+    their *expert* dim and the dispatch is ``moe_forward``'s all-to-all
+    token exchange instead of the replicated ETP buffer — ``tp_f``/``tp_g``
+    then only bracket the shared expert (still ETP-sharded on its ff
+    dim)."""
     from repro.parallel.tp import (copy_to_tp, gather_from_sp,
                                    reduce_from_tp, scatter_to_sp)
     gemma = spec.name.startswith("gemma")
@@ -458,7 +466,8 @@ def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
                           router_impl=opts.router_impl,
                           tp_f=tpf if tp_axis else None,
                           tp_g=tpg if tp_axis else None,
-                          sp_axis=tp_axis if sp else None)
+                          sp_axis=tp_axis if sp else None,
+                          ep=ep, ep_axis=tp_axis if ep > 1 else None)
         sel = moe_flag.astype(x.dtype)
         delta = out.y * sel
         if has_mlp:
@@ -477,19 +486,20 @@ def pipeline_stage_apply(layers_p: PyTree, spec: ModelSpec,
                          positions: jnp.ndarray, mask: jnp.ndarray,
                          moe_flag: jnp.ndarray,
                          tp_axis: Optional[str] = None,
-                         sp: bool = False
+                         sp: bool = False, ep: int = 1
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Scan this stage's l_max union slots.  ``layers_p`` leaves are
     (l_max, ...); ``mask``/``moe_flag`` are (l_max,).  With ``tp_axis`` the
     slots run manual TP; with ``sp`` additionally Megatron sequence
-    parallelism — ``x`` is then the seq-sharded residual (see
+    parallelism — ``x`` is then the seq-sharded residual; with ``ep`` the
+    MoE slots dispatch expert-parallel over the same axis (see
     ``_slot_apply``)."""
 
     def body(carry, inp):
         xc, aux = carry
         p_slot, m, f = inp
         xc, a = _slot_apply(p_slot, spec, opts, xc, positions, m, f, tp_axis,
-                            sp)
+                            sp, ep)
         return (xc, aux + a), None
 
     body = _remat(body, opts.recompute)

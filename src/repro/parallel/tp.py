@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -187,6 +188,100 @@ def _pmean_sp_bwd(axis, _, ct):
 
 
 pmean_sp.defvjp(_pmean_sp_fwd, _pmean_sp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel token boundary operators (a2a dispatch over 'model')
+# ---------------------------------------------------------------------------
+#
+# With EP on (``make_pipeline_train_step(..., ep=tp)``) the MoE layer's
+# routed experts live sharded on their *expert* dim across 'model' and the
+# token exchange is an explicit ``lax.all_to_all`` (models.moe's EP path).
+# Under SP the residual already arrives token-sharded, so EP composes with
+# no extra operator; without SP the residual is replicated across 'model'
+# and the EP region is bracketed by this pair — the token-dim analogue of
+# copy_to_tp / reduce_from_tp, encoding the same replication facts the
+# check_rep=False shard_map cannot prove:
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def shard_tokens_ep(x: jnp.ndarray, axis: str = TP_AXIS,
+                    dim: int = 0) -> jnp.ndarray:
+    """EP entry for a token tensor *replicated* across ``axis``: forward
+    takes the rank's own 1/ep chunk along ``dim`` (a slice — no collective;
+    every rank already holds the full tensor); backward all-gathers the
+    per-chunk cotangents, which are exact per token (each token's entire
+    downstream path runs on the one rank that owns it), so the assembled
+    full cotangent is exact and replicated — the invariant every upstream
+    consumer of the replicated residual assumes."""
+    n = jax.lax.psum(1, axis)
+    chunk = x.shape[dim] // n
+    return jax.lax.dynamic_slice_in_dim(
+        x, jax.lax.axis_index(axis) * chunk, chunk, axis=dim)
+
+
+def _shard_ep_fwd(x, axis, dim):
+    return shard_tokens_ep(x, axis, dim), None
+
+
+def _shard_ep_bwd(axis, dim, _, ct):
+    return (jax.lax.all_gather(ct, axis, axis=dim, tiled=True),)
+
+
+shard_tokens_ep.defvjp(_shard_ep_fwd, _shard_ep_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def unshard_tokens_ep(x: jnp.ndarray, axis: str = TP_AXIS,
+                      dim: int = 0) -> jnp.ndarray:
+    """EP exit: all-gather the per-rank token chunks along ``dim`` forward
+    (the combined MoE output rejoins the replicated residual); backward
+    slices the rank's own chunk of the — replicated, exact — cotangent.
+    A plain ``all_gather`` would transpose to ``psum_scatter``, which sums
+    the ep identical cotangent copies (ep× gradients); the slice encodes
+    the replication we know by construction."""
+    return jax.lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def _unshard_ep_fwd(x, axis, dim):
+    return jax.lax.all_gather(x, axis, axis=dim, tiled=True), None
+
+
+def _unshard_ep_bwd(axis, dim, _, ct):
+    n = jax.lax.psum(1, axis)
+    chunk = ct.shape[dim] // n
+    return (jax.lax.dynamic_slice_in_dim(
+        ct, jax.lax.axis_index(axis) * chunk, chunk, axis=dim),)
+
+
+unshard_tokens_ep.defvjp(_unshard_ep_fwd, _unshard_ep_bwd)
+
+
+def check_ep_supported(spec: ModelSpec, tp: int, ep: int, *,
+                       tokens_per_rank: Optional[int] = None) -> None:
+    """Executor guard for expert parallelism: the a2a dispatch group is the
+    whole 'model' axis, so the executor runs ``ep == tp`` (or 1 — the ETP
+    path); the expert count must divide exactly (the expert-dim weight
+    shard has no replicate-fallback) and without SP the per-rank token
+    slice must tile the axis."""
+    if ep == 1:
+        return
+    if not spec.is_moe:
+        raise ValueError(f"{spec.name}: ep={ep} needs an MoE model")
+    if ep != tp:
+        raise ValueError(
+            f"{spec.name}: ep={ep} != tp={tp}; the executor's a2a dispatch "
+            f"group is the whole 'model' axis, so EP degree is tied to it "
+            f"(grouped sub-axis a2a stays estimator-only)")
+    if spec.moe.n_routed % ep:
+        raise ValueError(
+            f"{spec.name}: ep={ep} does not divide n_routed="
+            f"{spec.moe.n_routed}; the expert-dim shard requires exact "
+            f"divisibility")
+    if tokens_per_rank is not None and tokens_per_rank % ep:
+        raise ValueError(
+            f"{spec.name}: ep={ep} does not divide the per-rank token count "
+            f"{tokens_per_rank} (b*s of one microbatch shard); the EP token "
+            f"slice has no pad/replicate fallback")
 
 
 # ---------------------------------------------------------------------------

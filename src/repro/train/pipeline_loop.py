@@ -101,11 +101,27 @@ loss and post-update params to bf16-accumulation tolerance at
 pp∈{2,4} × tp∈{1,2} × dp∈{1,2} (``tests/test_pipeline_1f1b.py``,
 ``tests/test_pipeline_3d.py``).
 
-Scope notes: MoE dispatch is ETP-style (all experts on every shard,
-expert-ff sharded) — EP placement remains GSPMD/dry-run territory.  MoE
-aux uses the scatter dispatch and is pmean'd across data shards (and,
-under ``sp``, its load-balance means are combined across the seq shards
-so the aux value matches sp=1 exactly).
+``ep=tp`` switches MoE layers from the default ETP dispatch (all experts
+on every shard, expert-ff sharded, replicated routing) to true expert
+parallelism on the same 'model' axis (paper §3.3): routed expert weights
+live sharded on their *expert* dim (``(E/ep, h, h_E)`` per shard, full
+hidden), each shard routes its own disjoint token chunk — the seq shard
+under ``sp``; a ``shard_tokens_ep`` slice of the replicated residual
+otherwise — buckets assignments by destination expert shard, and
+exchanges ``(ep, C_send, h)`` send buffers via ``lax.all_to_all`` over
+'model', runs the local ``(E/ep, C, h)`` grouped FFN and a2a's the
+outputs back (``models.moe._moe_forward_ep``).  The shared expert stays
+ETP (ff-sharded, every token through the f/g — or ğ/dual — pair), and
+the router joins the post-loop 'model' psum: it is consumed inside the
+token-sharded region, so its local grads are token-partial under EP
+exactly as under SP.  The a2a dispatch group is the whole 'model' axis,
+so the executor ties ``ep`` to ``tp`` (``parallel.tp.check_ep_supported``;
+grouped sub-axis a2a remains estimator-only).
+
+Scope notes: MoE aux uses the capacity dispatch and is pmean'd across
+data shards (and, under ``sp``/``ep``, its load-balance means are
+combined across the token shards so the aux value matches the
+unsharded step exactly).
 """
 
 from __future__ import annotations
@@ -128,9 +144,10 @@ from repro.optim.adamw import TrainState, adamw_update
 from repro.parallel.compat import shard_map
 from repro.parallel.sharding import (grad_shardings, pipeline_stage_specs,
                                      state_shardings)
-from repro.parallel.tp import (ce_sum_tp, check_sp_supported,
-                               check_tp_supported, copy_to_tp, embed_tp,
-                               gather_from_sp, tp_local_spec)
+from repro.parallel.tp import (ce_sum_tp, check_ep_supported,
+                               check_sp_supported, check_tp_supported,
+                               copy_to_tp, embed_tp, gather_from_sp,
+                               tp_local_spec)
 from repro.train.loop import TrainConfig, _split_micro
 from repro.train.schedules import build_exec_tables, make_schedule
 
@@ -141,6 +158,11 @@ PyTree = Any
 # then run replicated and bit-identical on every 'model' shard, which the
 # manual-collective construction requires (see parallel.tp).
 _EXEC_TP_RULES = {"expert": None, "expert_ff": "model"}
+# Executor EP rules (make_pipeline_train_step(..., ep=tp)): routed experts
+# shard their *expert* dim across 'model' (the §3.3 default) and keep the
+# full ff; the shared expert's 'ff' split is untouched (ETP).  Token
+# exchange is then models.moe's explicit a2a dispatch.
+_EXEC_EP_RULES = {"expert": "model", "expert_ff": None}
 
 
 def _ce_mask(mask: Optional[jnp.ndarray], tokens: jnp.ndarray) -> jnp.ndarray:
@@ -169,7 +191,7 @@ def _dyn(a: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
 def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
                              schedule: str = "1f1b", n_chunks: int = 1,
                              zero: ZeROStage = ZeROStage.NONE,
-                             sp: bool = False):
+                             sp: bool = False, ep: int = 1):
     """Build the jit-able schedule-driven pipeline step for ``mesh`` (axes
     ('pipe'[, 'data'][, 'model'])); pp = mesh.shape['pipe'], TP degree =
     mesh.shape['model'].  Same contract as ``make_train_step``.  ``zero``
@@ -184,7 +206,17 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     'model' axis size; requires tp > 1 and ``seq_len % tp == 0`` — see the
     module docstring for the boundary-operator construction).  The
     parameter/optimizer layout and ZeRO constraints are unchanged: SP only
-    re-shards activations, so it composes with any ``zero`` stage."""
+    re-shards activations, so it composes with any ``zero`` stage.
+
+    ``ep=tp`` turns on true expert parallelism for MoE layers (paper
+    §3.3): routed expert weights shard their *expert* dim across 'model'
+    (``_EXEC_EP_RULES``) and dispatch is the explicit all-to-all token
+    exchange — see the module docstring.  Requires an MoE model with
+    ``n_routed % ep == 0`` and, without ``sp``, a per-rank token count
+    divisible by ``ep``; the a2a group is the whole 'model' axis, so only
+    ``ep in (1, tp)`` is executable.  Composes with any schedule, ``sp``
+    and ``zero``; callers keeping state resident should use the
+    ``_EXEC_EP_RULES`` layout in ``state_shardings``."""
     spec, opts = model.spec, model.opts
     check_pipeline_supported(spec)
     if "pipe" not in mesh.axis_names:
@@ -198,6 +230,9 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
         raise ValueError(
             "sp=True needs a 'model' mesh axis of size > 1: Megatron SP "
             "ties the sequence-parallel degree to TP")
+    ep = int(ep)
+    check_ep_supported(spec, tp, ep)
+    rules = _EXEC_EP_RULES if ep > 1 else _EXEC_TP_RULES
     spec_run = tp_local_spec(spec, tp)
     if zero == ZeROStage.OS_G_PARAMS:
         raise NotImplementedError(
@@ -267,7 +302,7 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             positions = jnp.broadcast_to(jnp.arange(s)[None], (b_loc, s))
             y, aux = pipeline_stage_apply(pl, spec_run, opts, x, positions,
                                           smask[c], sflag[c], tp_axis,
-                                          sp=sp)
+                                          sp=sp, ep=ep)
             z = rmsnorm(ps["final_norm"], y, spec.norm_eps, gemma_style=gemma)
             w_out = ps["embed"]["w"].T if spec.tie_embeddings \
                 else ps["head"]["w"]
@@ -373,32 +408,40 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             tick, init, jnp.arange(T))
 
         g = dict(gsh, layers=gl)
-        if sp:
-            # Megatron SP grad completion: weights applied *inside* the
-            # seq-sharded region (norm scales, the MoE router) accumulate
-            # grads from their shard's tokens only, and MLA's replicated
-            # latent towers — which run without copy_to_tp under SP, the
-            # entry ğ doing the cross-shard sum instead — accumulate only
-            # their shard's heads' contribution.  One psum over 'model'
-            # assembles the full gradient for exactly those leaves.  Every
-            # other leaf's grad is already exact-local (the ğ/dual
-            # operators carry the cross-shard sums in their backward
-            # rules), so it must NOT be psummed — that would scale it by
-            # tp.
+        if sp or ep > 1:
+            # Token-sharded grad completion: weights applied *inside* a
+            # token-sharded region accumulate grads from their shard's
+            # tokens only; one psum over 'model' assembles the full
+            # gradient for exactly those leaves.  Under SP that is the
+            # norm scales, the MoE router and MLA's replicated latent
+            # towers (which run without copy_to_tp under SP — the entry
+            # ğ's reduce-scatter backward does the cross-shard sum — so
+            # their grads are head-partial).  Under EP (with or without
+            # SP) the router is consumed on each rank's disjoint token
+            # chunk, so it needs the same completion; the expert weights
+            # themselves do NOT — the a2a already delivered every rank
+            # the full token set bound for its experts, so their local
+            # grads are exact.  Every other leaf stays exact-local (the
+            # boundary operators carry the cross-shard sums in their
+            # backward rules) and must NOT be psummed — that would scale
+            # it by tp.
             lay = dict(g["layers"])
-            for k in ("ln1", "ln2"):
-                lay[k] = jax.lax.psum(lay[k], tp_axis)
+            if sp:
+                for k in ("ln1", "ln2"):
+                    lay[k] = jax.lax.psum(lay[k], tp_axis)
             if "moe" in lay:
                 lay["moe"] = dict(
                     lay["moe"],
                     router=jax.lax.psum(lay["moe"]["router"], tp_axis))
-            if spec.attention == AttentionKind.MLA:
+            if sp and spec.attention == AttentionKind.MLA:
                 attn_g = dict(lay["attn"])
                 for k in ("w_dq", "w_dkv", "w_kr", "q_norm", "kv_norm"):
                     attn_g[k] = jax.lax.psum(attn_g[k], tp_axis)
                 lay["attn"] = attn_g
-            g = dict(g, layers=lay,
-                     final_norm=jax.lax.psum(g["final_norm"], tp_axis))
+            g = dict(g, layers=lay)
+            if sp:
+                g = dict(g, final_norm=jax.lax.psum(g["final_norm"],
+                                                    tp_axis))
         g = jax.tree.map(lambda a: _psum(a, data_axes)[None], g)
         aux_acc = jax.lax.pmean(aux_acc, data_axes) if data_axes else aux_acc
         loss_sum = jax.lax.psum(loss + 0.01 * aux_acc, "pipe")
@@ -413,7 +456,7 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
         shardings (state keeps the pp=1 layout; the 'data'(+'pod') axes of
         this mesh *are* the within-stage DP group because PP carves the
         leading 'pipe' axis out of data)."""
-        sh = state_shardings(st, mesh, zero, rules=_EXEC_TP_RULES)
+        sh = state_shardings(st, mesh, zero, rules=rules)
         wsc = jax.lax.with_sharding_constraint
         return st._replace(master=wsc(st.master, sh.master),
                            m=wsc(st.m, sh.m), v=wsc(st.v, sh.v))
@@ -428,12 +471,18 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
                 f"(size {data_size})")
         if sp:
             check_sp_supported(spec, tp, toks.shape[2])
+        if ep > 1 and not sp:
+            # the EP entry slices each rank's replicated (b_loc·s) token
+            # set into ep chunks; under sp the residual already arrives
+            # token-sharded and no slice happens
+            check_ep_supported(
+                spec, tp, ep,
+                tokens_per_rank=(toks.shape[1] // data_size) * toks.shape[2])
         if zero != ZeROStage.NONE:
             state = _zero_constrain(state)
         stacked = stack_pipeline_params(state.params, spec, S,
                                         schedule=schedule, n_chunks=V)
-        stage_specs = pipeline_stage_specs(stacked, mesh,
-                                           rules=_EXEC_TP_RULES)
+        stage_specs = pipeline_stage_specs(stacked, mesh, rules=rules)
         dspec = tuple(data_axes) if data_axes else None
         margs = (toks,)
         mspecs = (P(None, dspec, None),)
@@ -460,7 +509,7 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             # per-stage DP group before the (sharded) optimizer update
             grads = jax.lax.with_sharding_constraint(
                 grads, grad_shardings(state.params, mesh, zero,
-                                      rules=_EXEC_TP_RULES))
+                                      rules=rules))
         new_state, opt_metrics = adamw_update(state, grads, cfg.adamw)
         if zero != ZeROStage.NONE:
             new_state = _zero_constrain(new_state)

@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_spec
-from repro.models.moe import (_positions_in_expert, moe_forward,
-                              moe_forward_dense_ref, moe_init)
+from repro.models.moe import (_positions_in_expert, _send_eid_buffer,
+                              moe_forward, moe_forward_dense_ref, moe_init)
 
 SPEC = get_spec("olmoe-1b-7b", smoke=True)
 
@@ -53,6 +53,21 @@ def test_positions_in_expert_property():
             mine = pos[np.asarray(eids) == e]
             assert sorted(mine.tolist()) == list(range(len(mine)))
         assert int(counts.sum()) == 64
+
+
+def test_send_eid_buffer_drops_overflow_writes():
+    """Regression: on destination-bucket overflow, the dropped assignment's
+    (clamped) padding write used to collide with slot c_send-1's real
+    expert-id write — scatter-set keeps an arbitrary duplicate, so a kept
+    token's expert output could be silently zeroed.  Unclamped positions
+    with mode="drop" never write out-of-capacity entries."""
+    dest = jnp.asarray([0, 0, 0, 1], jnp.int32)
+    pos = jnp.asarray([0, 1, 2, 0], jnp.int32)   # dest 0 overflows cap 2
+    eid = jnp.asarray([3, 1, 2, 0], jnp.int32)
+    buf = _send_eid_buffer(dest, pos, eid, 2, 2, 4)
+    # slot (0,1) keeps expert id 1; the overflow (pos=2) is dropped, and
+    # the unwritten slot (1,1) carries the padding marker e_loc=4
+    assert buf.tolist() == [[3, 1], [0, 4]]
 
 
 def test_capacity_drops_tokens_but_stays_finite(params):

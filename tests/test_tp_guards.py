@@ -82,8 +82,12 @@ def test_executor_runnable_marking():
     ok, why = executor_runnable(get_spec("rwkv6-1.6b"), _cfg(tp=1))
     assert not ok and "SSM" in why
     ds = get_spec("deepseek-v3")
+    # PR 5: ep == tp MoE configs ARE runnable (a2a dispatch over 'model');
+    # only degrees the whole-axis a2a group cannot place stay estimator-only
     ok, why = executor_runnable(ds, _cfg(tp=2, ep=2))
-    assert not ok and "EP" in why
+    assert ok, why
+    ok, why = executor_runnable(ds, _cfg(tp=4, ep=2, dp=2))
+    assert not ok and "estimator-only" in why
     ok, why = executor_runnable(ds, _cfg(tp=2, ep=1))
     assert ok, why
     hymba = get_spec("hymba-1.5b")
