@@ -9,25 +9,32 @@ on real hardware.
 
 from __future__ import annotations
 
-import time
+import json
+import os
+import sys
 from typing import List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir, "src"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+from repro.train.timing import merge_rows, time_callable
 
 Row = Tuple[str, float, str]
 
+ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
+                        "BENCH_kernels.json")
+
 
 def _time(fn, *args, n=5) -> float:
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(n):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / n * 1e6
+    """Median-of-``n`` µs via the shared harness timer (warmup outside the
+    timed windows, block inside each).  The old inline loop here reported a
+    mean over one blocked region — a single scheduler hiccup skewed it and
+    async dispatch of call k could leak into window k+1's sample."""
+    return time_callable(fn, *args, iters=n, warmup=1).median_us
 
 
 def bench_rmsnorm() -> List[Row]:
@@ -79,3 +86,29 @@ def bench_gmm() -> List[Row]:
 
 
 ALL = [bench_rmsnorm, bench_flash, bench_gmm]
+
+
+def main(out_path: str = ARTIFACT) -> int:
+    """Run every kernel bench and land the rows in BENCH_kernels.json —
+    same row schema as the CSV (name, µs, derived) plus the timing
+    provenance, deduped newest-wins on ``name`` like BENCH_step.json."""
+    rows = []
+    for fn in ALL:
+        for name, us, derived in fn():
+            rows.append({"name": name, "us_per_call": us, "derived": derived,
+                         "timer": "median_of_5_blocked"})
+            print(f"{name},{us:.2f},{derived}")
+    existing = []
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            existing = json.load(f)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(merge_rows(existing, rows, ("name",)), f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(rows)} rows -> {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,9 @@ from .planner import (PlanEntry, enumerate_configs, executor_runnable,
                       min_memory_config, plan)
 from .schedules import (SCHEDULES, PipelineSchedule, TickOp, make_schedule,
                         n_model_chunks, schedule_placement)
+from .steptime import (BubbleStats, StepTimePrediction, bubble_fraction,
+                       bubble_stats, exec_ticks, mfu, model_fwd_flops,
+                       predict_step_time, step_flops)
 from .zero import TrainStateBytes, zero_memory, zero_table
 
 __all__ = [
@@ -26,14 +29,18 @@ __all__ = [
     "EncoderSpec", "FP8_POLICY", "FamilyKind", "MLASpec", "MemoryEstimate",
     "MlpKind", "MoESpec", "ModelSpec", "PAPER_CONFIG", "ParallelConfig",
     "RecomputePolicy", "SSMSpec", "TrainStateBytes", "ZeROStage",
-    "PipelineSchedule", "PlanEntry", "SCHEDULES", "TickOp",
-    "device_params", "enumerate_configs", "estimate_memory",
+    "BubbleStats", "PipelineSchedule", "PlanEntry", "SCHEDULES",
+    "StepTimePrediction", "TickOp",
+    "bubble_fraction", "bubble_stats",
+    "device_params", "enumerate_configs", "estimate_memory", "exec_ticks",
     "executor_runnable", "fits",
     "human_bytes", "human_count", "kv_cache_bytes", "layer_activation_bytes",
-    "make_schedule", "max_stage", "min_memory_config", "mla_activation_bytes",
+    "make_schedule", "max_stage", "mfu", "min_memory_config",
+    "mla_activation_bytes", "model_fwd_flops",
     "moe_activation_bytes", "n_model_chunks", "one_f1b_in_flight", "plan",
+    "predict_step_time",
     "rank_chunk_layers", "schedule_activation_bytes", "schedule_in_flight",
-    "schedule_placement", "stage_activation_bytes", "table10",
+    "schedule_placement", "stage_activation_bytes", "step_flops", "table10",
     "table3_rows", "table4_stages", "total_params_paper", "tp_violations",
     "zero_memory", "zero_table",
 ]

@@ -289,6 +289,9 @@ def schedule_in_flight(pp: int, rank: int, n_micro: Optional[int] = None, *,
       (each unit is one of the rank's v *chunks*, ~1/v of its layers)
     * ``dualpipe``:    min(⌈M/2⌉, pp - rank) + min(⌊M/2⌋, rank + 1)
       (≈ pp + 1 on every rank — DualPipe's near-flat profile)
+    * ``zb1p``:        min(M, pp - rank) — same as 1f1b: activations still
+      retire at B (input-gradient); the deferred W ops hold *gradient*
+      state, priced separately by ``estimate_memory(schedule="zb1p")``
 
     ``n_micro=None`` gives the M→∞ steady-state value.
     """
@@ -296,7 +299,7 @@ def schedule_in_flight(pp: int, rank: int, n_micro: Optional[int] = None, *,
     if not 0 <= rank < pp:
         raise ValueError(f"rank {rank} outside [0, {pp})")
     v = norm_chunks(schedule, n_chunks)
-    if schedule == "1f1b":
+    if schedule in ("1f1b", "zb1p"):
         resident = pp - rank
         return min(n_micro, resident) if n_micro is not None else resident
     if schedule == "interleaved":

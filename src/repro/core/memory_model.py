@@ -70,9 +70,13 @@ def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
     (``schedule_activation_bytes``), and params/grads/optimizer cover every
     layer chunk the rank holds under that schedule — under ``dualpipe`` each
     rank holds two model chunks, the schedule's 2× parameter cost; under
-    ``interleaved`` a rank holds ``n_chunks`` virtual stages.  The plain
-    ``stage=``/``in_flight_microbatches=`` path is the schedule-unaware
-    paper view and is unchanged.
+    ``interleaved`` a rank holds ``n_chunks`` virtual stages.  Under
+    ``zb1p`` activations match 1f1b (B still retires them) but the grads
+    term carries one extra fp32 copy of the rank's *layer* gradients — the
+    executor's pending-dW stash, the memory zero-bubble trades for its
+    bubble (the stash is a scan carry, so it is DP-replicated and does not
+    shard under ZeRO).  The plain ``stage=``/``in_flight_microbatches=``
+    path is the schedule-unaware paper view and is unchanged.
     """
     if schedule is not None and not training:
         raise ValueError(
@@ -92,6 +96,9 @@ def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
         layers = [l for ls in chunks for l in ls]
         state = zero_memory(spec, cfg, layers=layers)
         params, grads, opt = state.params, state.grads, state.optimizer
+        if schedule == "zb1p":
+            dev = device_params(spec, cfg, layers=layers)
+            grads += (dev.total - dev.embed) * 4   # fp32 pending-dW stash
         acts = schedule_activation_bytes(spec, cfg, rank, schedule=schedule,
                                          n_chunks=n_chunks, n_micro=n_micro)
         subtotal = params + grads + opt + acts + cfg.comm_buffer_bytes

@@ -39,6 +39,7 @@ from .activations import one_f1b_in_flight
 from .memory_model import MemoryEstimate, estimate_memory
 from .notation import AttentionKind, FamilyKind, ModelSpec, tp_violations
 from .parallel_config import ParallelConfig, RecomputePolicy, ZeROStage
+from .steptime import predict_step_time
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,10 @@ class PlanEntry:
     # end to end (vs. estimator/dry-run-only); see executor_runnable().
     runnable: bool = True
     why_not_runnable: str = ""
+    # Executor-model step time (core.steptime.predict_step_time) under the
+    # plan's schedule — the quantity runnable configs are ranked by.  None
+    # when prediction is unavailable (e.g. schedule/pp mismatch).
+    predicted_step_s: Optional[float] = None
 
     @property
     def headroom(self) -> int:
@@ -151,11 +156,17 @@ def enumerate_configs(spec: ModelSpec, world_size: int, *,
 def plan(spec: ModelSpec, world_size: int, hbm_bytes: int, *,
          seq_len: int = 4096, top_k: int = 10, pp_in_flight: bool = True,
          schedule: str = "1f1b", n_chunks: int = 1,
+         n_micro: Optional[int] = None,
          **enum_kw) -> List[PlanEntry]:
     """Feasible configs under the HBM budget, best-first.
 
-    Ranking: least recompute, largest micro-batch, least TP*PP (model-parallel
-    keeps devices busier when avoidable), then most headroom.
+    Ranking: *runnable* configs first, ordered by the executor-model step
+    time (``core.steptime.predict_step_time`` under ``schedule`` with
+    ``n_micro`` microbatches — default ``2·pp``, enough for every schedule
+    to reach steady state) with the legacy memory ordering as tie-break;
+    estimator-only configs follow under the legacy ordering alone: least
+    recompute, largest micro-batch, least TP*PP (model-parallel keeps
+    devices busier when avoidable), then least total memory.
 
     ``pp_in_flight`` sizes activations for the pipeline schedule's steady
     state (the runtime's behaviour): under the default ``schedule='1f1b'``
@@ -195,10 +206,32 @@ def plan(spec: ModelSpec, world_size: int, hbm_bytes: int, *,
             est = estimate_memory(spec, cfg, in_flight_microbatches=in_flight)
         if est.total <= hbm_bytes:
             ok, why = executor_runnable(spec, cfg, schedule=schedule)
+            pred = None
+            if ok:
+                try:
+                    m = n_micro if n_micro is not None else max(2 * cfg.pp,
+                                                                n_chunks)
+                    if schedule == "interleaved" and m % cfg.pp:
+                        m = ((m + cfg.pp - 1) // cfg.pp) * cfg.pp
+                    pred = predict_step_time(
+                        spec, schedule, cfg.pp, m,
+                        micro_batch=cfg.micro_batch, seq_len=cfg.seq_len,
+                        n_chunks=n_chunks, tp=cfg.tp,
+                        sp=cfg.sp_degree > 1).total_s
+                except ValueError:
+                    pred = None
             entries.append(PlanEntry(cfg, est, budget=hbm_bytes,
-                                     runnable=ok, why_not_runnable=why))
-    entries.sort(key=lambda e: (order_r[e.cfg.recompute], -e.cfg.micro_batch,
-                                e.cfg.tp * e.cfg.pp, e.estimate.total))
+                                     runnable=ok, why_not_runnable=why,
+                                     predicted_step_s=pred))
+
+    def legacy(e: PlanEntry):
+        return (order_r[e.cfg.recompute], -e.cfg.micro_batch,
+                e.cfg.tp * e.cfg.pp, e.estimate.total)
+
+    entries.sort(key=lambda e: (
+        (0, e.predicted_step_s) + legacy(e)
+        if e.runnable and e.predicted_step_s is not None
+        else (1,) + legacy(e) + (0,)))
     return entries[:top_k]
 
 

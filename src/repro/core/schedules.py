@@ -12,7 +12,7 @@ chunk), and everything downstream derives from that single tick stream:
 * the per-rank dry-run probes (``launch.dryrun --pp N --schedule ...``),
 * the tick diagrams in ``docs/pipeline-schedules.md``.
 
-Three schedules are implemented:
+Four schedules are implemented:
 
 ``1f1b``
     Plain GPipe-fill + 1F1B steady state (one layer chunk per rank).  Rank r
@@ -39,7 +39,21 @@ Three schedules are implemented:
     odd ticks the reverse), which keeps the memory profile of DualPipe
     without its overlapped dual-stream compute.
 
-Time model: canonical ticks are ONE op (F or B) per rank per tick, the unit
+``zb1p``
+    ZB-H1 zero-bubble schedule (arXiv:2401.10241): the backward is split
+    into B (input gradient, on the critical dx chain) and a third op kind
+    ``W`` (weight gradient, off the critical path).  Each rank runs the
+    1f1b F/B order unchanged plus a second queue of W ops, W(m) ordered
+    after B(m); the greedy tick assigner gives F/B strict priority, so W
+    ops land exactly in the ticks 1f1b would leave idle — the zero-bubble
+    trick.  Activation residency is 1f1b's ``min(M, pp - r)`` (activations
+    retire at B as before); what W defers is the *gradient-accumulation*
+    work, priced by the memory model as one extra fp32 layer-grad buffer
+    (``estimate_memory(schedule="zb1p")``).  With unit op costs the
+    canonical bubble per rank drops from 1f1b's ``2(pp-1)`` idle slots to
+    ``~(pp-1)`` (ZB-H1's (p-1)(F+B-W) vs (p-1)(F+B+W)).
+
+Time model: canonical ticks are ONE op (F, B or W) per rank per tick, the unit
 the in-flight literature uses; the runtime executor compresses this to one
 F *and* one B per tick (see ``train.schedules``).  Both timelines are
 emitted from the same per-rank op orders by :func:`assign_ticks`.
@@ -56,18 +70,19 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-SCHEDULES = ("1f1b", "interleaved", "dualpipe")
+SCHEDULES = ("1f1b", "interleaved", "dualpipe", "zb1p")
 
 
 @dataclasses.dataclass(frozen=True)
 class TickOp:
     """One scheduled operation: at tick ``t`` rank ``rank`` runs a forward
-    (``op='F'``) or backward (``op='B'``) of ``micro`` on its local layer
-    chunk ``chunk`` (which holds global model chunk ``stage``)."""
+    (``op='F'``), input-gradient backward (``op='B'``) or — under zb1p —
+    a deferred weight-gradient op (``op='W'``) of ``micro`` on its local
+    layer chunk ``chunk`` (which holds global model chunk ``stage``)."""
 
     t: int
     rank: int
-    op: str          # 'F' | 'B'
+    op: str          # 'F' | 'B' | 'W'
     micro: int
     stage: int       # global model-chunk id, 0..n_stages-1 (traversal order)
     chunk: int       # local chunk index on the rank, 0..n_chunks-1
@@ -82,7 +97,7 @@ def schedule_placement(schedule: str, pp: int, n_chunks: int = 1
     ``(r, pp-1-r)`` — model chunks are *duplicated* across two ranks (the
     2×-parameter cost of DualPipe)."""
     v = norm_chunks(schedule, n_chunks)
-    if schedule == "1f1b":
+    if schedule in ("1f1b", "zb1p"):
         return tuple((r,) for r in range(pp))
     if schedule == "interleaved":
         return tuple(tuple(c * pp + r for c in range(v)) for r in range(pp))
@@ -98,9 +113,9 @@ def n_model_chunks(schedule: str, pp: int, n_chunks: int = 1) -> int:
 
 
 def norm_chunks(schedule: str, n_chunks: int) -> int:
-    if schedule == "1f1b":
+    if schedule in ("1f1b", "zb1p"):
         if n_chunks != 1:
-            raise ValueError("1f1b uses n_chunks=1")
+            raise ValueError(f"{schedule} uses n_chunks=1")
         return 1
     if schedule == "dualpipe":
         if n_chunks not in (1, 2):
@@ -153,6 +168,17 @@ def _orders(schedule: str, pp: int, n_micro: int, v: int
     if schedule == "1f1b":
         return [[_Queue(tuple(_order_1f1b_pos(pp, r, range(n_micro), r)),
                         {r: 0})]
+                for r in range(pp)]
+
+    if schedule == "zb1p":
+        # ZB-H1: the F/B queue is exactly 1f1b's; a second queue holds the
+        # deferred weight-gradient ops W_0..W_{M-1}.  The greedy assigner
+        # visits queues in order, so F/B keep strict priority and W ops
+        # fill the slots 1f1b leaves idle (the zero-bubble insight); the
+        # per-op dependency W(m) -> after B(m) lives in assign_ticks.
+        return [[_Queue(tuple(_order_1f1b_pos(pp, r, range(n_micro), r)),
+                        {r: 0}),
+                 _Queue(tuple(("W", m, r) for m in range(n_micro)), {r: 0})]
                 for r in range(pp)]
 
     if schedule == "dualpipe":
@@ -214,12 +240,13 @@ def assign_ticks(orders: List[List[_Queue]], n_stages: int, *,
                  fb_per_tick: bool) -> Dict[Tuple[str, int, int], int]:
     """Assign a tick to every op, respecting (i) in-queue order, (ii) data
     dependencies with one-tick transfer latency — F(m,g) strictly after
-    F(m,g-1), B(m,g) strictly after B(m,g+1) — and (iii) rank capacity.
+    F(m,g-1), B(m,g) strictly after B(m,g+1), W(m,g) strictly after
+    B(m,g) — and (iii) rank capacity.
 
     ``fb_per_tick=False`` is the canonical timeline (one op per rank per
     tick; B(m, last) strictly after F(m, last)); ``fb_per_tick=True`` is the
-    executor timeline (one F *and* one B per rank per tick; the last stage's
-    backward may share its forward's tick — the 1F1B hand-off)."""
+    executor timeline (one F, one B *and* one W per rank per tick; the last
+    stage's backward may share its forward's tick — the 1F1B hand-off)."""
     assigned: Dict[Tuple[str, int, int], int] = {}
     ptrs = [[0] * len(qs) for qs in orders]
     remaining = sum(len(q.ops) for qs in orders for q in qs)
@@ -229,7 +256,7 @@ def assign_ticks(orders: List[List[_Queue]], n_stages: int, *,
         if t > limit:
             raise RuntimeError("schedule deadlocked (invalid op order)")
         for r, queues in enumerate(orders):
-            cap = {"F": 1, "B": 1} if fb_per_tick else {"all": 1}
+            cap = {"F": 1, "B": 1, "W": 1} if fb_per_tick else {"all": 1}
             progress = True
             while progress:
                 progress = False
@@ -247,6 +274,8 @@ def assign_ticks(orders: List[List[_Queue]], n_stages: int, *,
                     same_tick_ok = False
                     if kind == "F" and stage > 0:
                         dep = ("F", micro, stage - 1)
+                    elif kind == "W":
+                        dep = ("B", micro, stage)
                     elif kind == "B":
                         if stage == n_stages - 1:
                             dep = ("F", micro, stage)
@@ -337,24 +366,30 @@ class PipelineSchedule:
 
     def check(self) -> None:
         """Raise if the tick stream violates the schedule invariants (every
-        micro forwarded/backwarded exactly once per model chunk, backward
-        after forward, dependencies with 1-tick latency, rank capacity)."""
+        micro forwarded/backwarded — and, under zb1p, weight-gradded —
+        exactly once per model chunk, backward after forward, W after its
+        backward, dependencies with 1-tick latency, rank capacity)."""
         G, M = self.n_stages, self.n_micro
         f: Dict[Tuple[int, int], TickOp] = {}
         b: Dict[Tuple[int, int], TickOp] = {}
-        per_tick: Dict[Tuple[int, int, str], int] = {}
+        w: Dict[Tuple[int, int], TickOp] = {}
+        per_slot: Dict[Tuple[int, int], int] = {}
         for op in self.ticks:
-            d = f if op.op == "F" else b
+            d = {"F": f, "B": b, "W": w}[op.op]
             key = (op.micro, op.stage)
             assert key not in d, f"duplicate {op}"
             d[key] = op
-            k = (op.t, op.rank, op.op)
-            per_tick[k] = per_tick.get(k, 0) + 1
-            assert per_tick[k] == 1, f"rank capacity violated at {op}"
+            k = (op.t, op.rank)
+            per_slot[k] = per_slot.get(k, 0) + 1
+            assert per_slot[k] == 1, f"rank capacity violated at {op}"
             r, c = self.owner(op.stage, op.micro)
             assert (op.rank, op.chunk) == (r, c), f"misplaced {op}"
         assert len(f) == G * M and len(b) == G * M, \
             f"expected {G * M} F and B ops, got {len(f)}/{len(b)}"
+        if self.name == "zb1p":
+            assert len(w) == G * M, f"expected {G * M} W ops, got {len(w)}"
+        else:
+            assert not w, f"{self.name} emitted W ops"
         for (m, g), op in f.items():
             if g > 0:
                 assert f[(m, g - 1)].t < op.t, f"F dep violated at {op}"
@@ -362,6 +397,8 @@ class PipelineSchedule:
             assert f[(m, g)].t <= op.t, f"B before F at {op}"
             if g < G - 1:
                 assert b[(m, g + 1)].t < op.t, f"B dep violated at {op}"
+        for (m, g), op in w.items():
+            assert b[(m, g)].t < op.t, f"W before B at {op}"
 
 
 @functools.lru_cache(maxsize=512)
@@ -383,10 +420,11 @@ def _in_flight_series(sched: "PipelineSchedule") -> np.ndarray:
 def make_schedule(name: str, pp: int, n_micro: int,
                   n_chunks: int = 1) -> PipelineSchedule:
     """Build the canonical tick stream for ``name`` ∈ {1f1b, interleaved,
-    dualpipe}.  ``n_chunks`` is the virtual-stage count per rank (forced to
-    1 for 1f1b and 2 for dualpipe; >= 2 for interleaved)."""
+    dualpipe, zb1p}.  ``n_chunks`` is the virtual-stage count per rank
+    (forced to 1 for 1f1b/zb1p and 2 for dualpipe; >= 2 for
+    interleaved)."""
     v = norm_chunks(name, n_chunks)
-    if pp < 1 or (name != "1f1b" and pp < 2):
+    if pp < 1 or (name not in ("1f1b", "zb1p") and pp < 2):
         raise ValueError(f"{name} needs pp >= 2 (got {pp})")
     if n_micro < 1:
         raise ValueError("n_micro must be >= 1")

@@ -1,0 +1,278 @@
+"""Analytic step-time / bubble model (the perf-trajectory layer).
+
+The memory model answers "does it fit"; this module answers "how long is a
+step" — at the same level of abstraction and from the same primitive, the
+schedule tick stream of :mod:`core.schedules`.  Two views are provided, and
+it matters which one a caller wants:
+
+**Ideal timeline** (:func:`bubble_stats`): re-time the canonical per-rank op
+order with real op durations — forward ``t_f``, input-gradient backward
+``t_b``, weight-gradient ``t_w`` (schedules that do not split the backward
+run B as one op of duration ``t_b + t_w``) — and report the makespan and
+the bubble fraction ``1 - busy / (pp * makespan)``.  This is the number the
+schedule literature quotes: with ``t_f = t_b = t_w``, 1f1b's bubble is
+``2(pp-1)`` op-slots per rank and zb1p's collapses toward ``(pp-1)``
+(ZB-H1's ``(p-1)(F+B-W)``, arXiv:2401.10241), which is *why* zero-bubble
+schedules exist.
+
+**Executor model** (:func:`predict_step_time`): what
+``train.pipeline_loop``'s masked SPMD executor will actually measure.  That
+executor burns one full (masked) chunk forward + one full (masked) chunk
+vjp every tick on every rank regardless of the activity masks, so its wall
+clock is ``T_exec × per-tick cost`` — schedules differ through their
+executor tick count (``exec_tick_times``), their chunk depth (interleaved
+halves layers per tick), their ring count (dualpipe permutes both
+directions) and, for zb1p, the pending-gradient flush traffic.  On this
+executor zb1p costs ``T_exec(1f1b) + 1`` ticks plus the flush — it cannot
+*win* here; its bubble elimination pays off on hardware that skips masked
+work.  The benchmark harness (``benchmarks/step_bench.py``) gates measured
+rankings against THIS model, not the ideal one.
+
+Also here: the analytic FLOPs the harness converts wall clock into MFU with
+(:func:`model_fwd_flops` / :func:`step_flops` / :func:`mfu`), counting
+dense-matmul + attention-score work per token, PaLM-appendix style.
+
+Pure Python/numpy — ``core`` stays jax-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, Tuple
+
+from .notation import AttentionKind, ModelSpec
+from .schedules import (PipelineSchedule, exec_tick_times, make_schedule,
+                        n_model_chunks, norm_chunks)
+
+# Nominal device constants for the executor model.  Rankings across
+# schedules — the only thing CI asserts — are insensitive to them; the
+# benchmark harness substitutes host-calibrated values for absolute
+# predictions.  Defaults: A100-class bf16 peak and NVLink-class bandwidth.
+NOMINAL_FLOPS_PER_S = 312e12
+NOMINAL_BYTES_PER_S = 300e9
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs (MFU's denominator)
+# ---------------------------------------------------------------------------
+
+def layer_fwd_flops(spec: ModelSpec, layer_idx: int, tokens: int,
+                    seq_len: int) -> float:
+    """Forward FLOPs of transformer layer ``layer_idx`` for ``tokens``
+    tokens at context ``seq_len``: 2 FLOPs per parameter per token for the
+    projections (MoE layers count only the *active* experts + router), plus
+    the attention score/value quadratic ``4·tokens·s·n_h·d`` (QKᵀ and A·V,
+    causal masking not discounted — the kernels compute the full product).
+    Norm/elementwise work is omitted (sub-percent)."""
+    proj = spec.attn_params_per_layer(include_qk_norm=False)
+    if spec.is_moe and layer_idx in spec.moe_layer_indices():
+        proj += spec.moe_active_params_per_layer()
+    elif spec.h_ff:
+        proj += spec.dense_mlp_params_per_layer()
+    if spec.ssm is not None:
+        proj += spec.ssm_params_per_layer()
+    flops = 2.0 * tokens * proj
+    if spec.attention == AttentionKind.MLA:
+        d_eff = spec.mla.d_h + spec.mla.d_hr
+        flops += 4.0 * tokens * seq_len * spec.n_h * d_eff
+    elif spec.attention != AttentionKind.NONE:
+        flops += 4.0 * tokens * seq_len * spec.n_h * spec.d_head
+    return flops
+
+
+def model_fwd_flops(spec: ModelSpec, tokens: int, seq_len: int) -> float:
+    """Forward FLOPs of the full model: all layers + the vocab head
+    (``2·tokens·h·v``; the embedding lookup is free)."""
+    flops = sum(layer_fwd_flops(spec, l, tokens, seq_len)
+                for l in range(spec.n_layers))
+    return flops + 2.0 * tokens * spec.h * spec.vocab
+
+
+def step_flops(spec: ModelSpec, tokens: int, seq_len: int, *,
+               recompute: bool = False) -> float:
+    """Model FLOPs of one training step over ``tokens`` tokens: forward +
+    2× forward for the backward (the PaLM-appendix 3× convention).  MFU
+    deliberately excludes rematerialization — pass ``recompute=True`` only
+    to price *hardware* FLOPs (e.g. the executor's chunk-recompute
+    backward, a 4× multiplier)."""
+    mult = 4.0 if recompute else 3.0
+    return mult * model_fwd_flops(spec, tokens, seq_len)
+
+
+def mfu(step_time_s: float, spec: ModelSpec, tokens: int, seq_len: int, *,
+        peak_flops_per_s: float, n_devices: int = 1) -> float:
+    """Model-FLOPs utilization: analytic step FLOPs (no recompute credit)
+    over the hardware's peak across ``n_devices`` for ``step_time_s``."""
+    if step_time_s <= 0 or peak_flops_per_s <= 0 or n_devices < 1:
+        raise ValueError("mfu needs positive time, peak and device count")
+    return step_flops(spec, tokens, seq_len) / (
+        step_time_s * peak_flops_per_s * n_devices)
+
+
+# ---------------------------------------------------------------------------
+# Ideal timeline: weighted retiming of the canonical op order
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BubbleStats:
+    """Weighted-retiming summary of one schedule's canonical timeline."""
+
+    schedule: str
+    pp: int
+    n_micro: int
+    n_chunks: int
+    makespan: float                 # critical-path length, op-duration units
+    busy: Tuple[float, ...]         # per-rank total op time
+    bubble_fraction: float          # 1 - sum(busy) / (pp * makespan)
+
+
+def weighted_finish_times(sched: PipelineSchedule, *, t_f: float = 1.0,
+                          t_b: float = 1.0, t_w: float = 1.0
+                          ) -> Dict[Tuple[str, int, int], float]:
+    """Finish time of every canonical op when ops take real durations
+    instead of unit ticks.  The per-rank op *order* is the schedule's
+    (canonical tick order); each op starts at max(rank free, dependency
+    finish) — list scheduling, so parity padding (dualpipe's alternating
+    ticks) compacts away and only order + dependencies remain.
+
+    Durations: F costs ``t_f``; under zb1p B costs ``t_b`` and W ``t_w``;
+    schedules that do not split the backward run B as one ``t_b + t_w`` op.
+    Interleaved chunk ops scale by ``1/v`` (a chunk holds ~1/v of a rank's
+    layers; uniform-depth approximation)."""
+    G = sched.n_stages
+    scale = 1.0 / sched.n_chunks if sched.name == "interleaved" else 1.0
+    split = sched.name == "zb1p"
+    dur = {"F": t_f * scale,
+           "B": (t_b if split else t_b + t_w) * scale,
+           "W": t_w * scale}
+    finish: Dict[Tuple[str, int, int], float] = {}
+    rank_free = [0.0] * sched.pp
+    for op in sched.ticks:          # sorted by canonical tick: deps first
+        start = rank_free[op.rank]
+        if op.op == "F" and op.stage > 0:
+            start = max(start, finish[("F", op.micro, op.stage - 1)])
+        elif op.op == "W":
+            start = max(start, finish[("B", op.micro, op.stage)])
+        elif op.op == "B":
+            dep = ("F", op.micro, op.stage) if op.stage == G - 1 \
+                else ("B", op.micro, op.stage + 1)
+            start = max(start, finish[dep])
+        f = start + dur[op.op]
+        finish[(op.op, op.micro, op.stage)] = f
+        rank_free[op.rank] = f
+    return finish
+
+
+@functools.lru_cache(maxsize=1024)
+def bubble_stats(schedule: str, pp: int, n_micro: int, n_chunks: int = 1, *,
+                 t_f: float = 1.0, t_b: float = 1.0, t_w: float = 1.0
+                 ) -> BubbleStats:
+    """Makespan, per-rank busy time and bubble fraction of the schedule's
+    ideal (canonical-order, real-duration) timeline.  With the default
+    ``t_f = t_b = t_w = 1`` every schedule does 3 units of work per micro
+    per stage, so fractions are directly comparable: 1f1b's bubble ≈
+    ``(pp-1)/(M+pp-1)`` and zb1p's shrinks toward a third of it."""
+    sched = make_schedule(schedule, pp, n_micro, n_chunks=n_chunks)
+    finish = weighted_finish_times(sched, t_f=t_f, t_b=t_b, t_w=t_w)
+    makespan = max(finish.values())
+    scale = 1.0 / sched.n_chunks if sched.name == "interleaved" else 1.0
+    split = sched.name == "zb1p"
+    dur = {"F": t_f * scale,
+           "B": (t_b if split else t_b + t_w) * scale,
+           "W": t_w * scale}
+    busy = [0.0] * pp
+    for op in sched.ticks:
+        busy[op.rank] += dur[op.op]
+    frac = 1.0 - sum(busy) / (pp * makespan)
+    return BubbleStats(schedule=schedule, pp=pp, n_micro=n_micro,
+                       n_chunks=sched.n_chunks, makespan=makespan,
+                       busy=tuple(busy), bubble_fraction=frac)
+
+
+def bubble_fraction(schedule: str, pp: int, n_micro: int,
+                    n_chunks: int = 1, **kw) -> float:
+    return bubble_stats(schedule, pp, n_micro, n_chunks, **kw).bubble_fraction
+
+
+# ---------------------------------------------------------------------------
+# Executor model: what the masked SPMD tick loop will measure
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1024)
+def exec_ticks(schedule: str, pp: int, n_micro: int,
+               n_chunks: int = 1) -> int:
+    """Tick count of the executor timeline (one masked F + one masked B —
+    and, zb1p, one masked W flush — per rank per tick)."""
+    sched = make_schedule(schedule, pp, n_micro, n_chunks=n_chunks)
+    return max(exec_tick_times(sched).values()) + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class StepTimePrediction:
+    """Executor-model step time, decomposed per tick.  ``total_s`` =
+    ``ticks × (compute + comm + flush + overhead)``."""
+
+    schedule: str
+    pp: int
+    n_micro: int
+    n_chunks: int
+    ticks: int
+    compute_s_per_tick: float
+    comm_s_per_tick: float
+    flush_s_per_tick: float         # zb1p pending-gradient traffic; else 0
+    overhead_s_per_tick: float
+    ideal_bubble_fraction: float    # the bubble_stats view, for the record
+
+    @property
+    def total_s(self) -> float:
+        return self.ticks * (self.compute_s_per_tick + self.comm_s_per_tick
+                             + self.flush_s_per_tick
+                             + self.overhead_s_per_tick)
+
+
+def predict_step_time(spec: ModelSpec, schedule: str, pp: int,
+                      n_micro: int, *, micro_batch: int, seq_len: int,
+                      n_chunks: int = 1, tp: int = 1, sp: bool = False,
+                      flops_per_s: float = NOMINAL_FLOPS_PER_S,
+                      bytes_per_s: float = NOMINAL_BYTES_PER_S,
+                      tick_overhead_s: float = 0.0) -> StepTimePrediction:
+    """Predict what ``make_pipeline_train_step`` will measure for this
+    (schedule, pp, tp, sp) on hardware with the given matmul throughput and
+    memory/interconnect bandwidth.
+
+    Per tick the executor runs one full chunk forward and one full chunk
+    vjp (forward replay + 2× backward ≈ 3× forward) over the rank's
+    ``l_max``-layer union slots *plus* the always-on embed/head/CE, TP
+    dividing the matmul work; boundary ``ppermute`` payloads are
+    ``b·s[/tp under sp]·h`` bf16, two rings for the down/up pair every
+    schedule uses and four for dualpipe; zb1p adds the pending-stash
+    read-modify-write (4× the chunk's fp32 grad bytes) every tick.  Only
+    *rankings* across schedules at fixed everything-else are load-bearing
+    (CI's direction gate); absolute times need calibrated constants."""
+    v = norm_chunks(schedule, n_chunks)
+    ticks = exec_ticks(schedule, pp, n_micro, n_chunks=v)
+    G = n_model_chunks(schedule, pp, v)
+    l_chunk = math.ceil(spec.n_layers / G)
+    tokens = micro_batch * seq_len
+    layers_fwd = sum(layer_fwd_flops(spec, l, tokens, seq_len)
+                     for l in range(spec.n_layers)) / spec.n_layers
+    head_fwd = 2.0 * tokens * spec.h * spec.vocab
+    chunk_fwd = l_chunk * layers_fwd + head_fwd
+    compute = 4.0 * chunk_fwd / tp / flops_per_s
+    rings = 4 if schedule == "dualpipe" else 2
+    payload = micro_batch * (seq_len // tp if sp else seq_len) * spec.h * 2
+    comm = rings * payload / bytes_per_s
+    flush = 0.0
+    if schedule == "zb1p":
+        chunk_params = sum(spec.layer_params(l)
+                           for l in range(spec.n_layers)) \
+            / spec.n_layers * l_chunk
+        flush = 4.0 * (chunk_params * 4 / tp) / bytes_per_s
+    ideal = bubble_fraction(schedule, pp, n_micro, v)
+    return StepTimePrediction(
+        schedule=schedule, pp=pp, n_micro=n_micro, n_chunks=v, ticks=ticks,
+        compute_s_per_tick=compute, comm_s_per_tick=comm,
+        flush_s_per_tick=flush, overhead_s_per_tick=tick_overhead_s,
+        ideal_bubble_fraction=ideal)

@@ -33,7 +33,7 @@ ep divisor, N=1 pins the ETP layout — so an ``__ep1``/``__ep2`` artifact
 pair measures the (E/ep, C, h) dispatch-buffer shrink.  With ``--pp N``
 (> 1) each pipeline rank is
 compiled as its own program holding the schedule's in-flight microbatch
-counts (``--schedule {1f1b,interleaved,dualpipe}``, ``--pp-chunks`` virtual
+counts (``--schedule {1f1b,interleaved,dualpipe,zb1p}``, ``--pp-chunks`` virtual
 stages per rank) next to ``estimate_memory(stage=r, schedule=...)`` — the
 measurement side of ``docs/pipeline-schedules.md``.
 
@@ -627,9 +627,19 @@ def main() -> int:
                          "to measure the (E/ep, C, h) dispatch-buffer "
                          "shrink")
     ap.add_argument("--schedule", default="1f1b",
-                    choices=["1f1b", "interleaved", "dualpipe"],
+                    choices=["1f1b", "interleaved", "dualpipe", "zb1p"],
                     help="pipeline schedule for --pp probes: sets per-rank "
-                         "chunk layout and in-flight residency")
+                         "chunk layout and in-flight residency (zb1p: 1f1b "
+                         "activation residency + the fp32 pending-dW stash "
+                         "in the analytic grads column)")
+    ap.add_argument("--bench-steps", type=int, default=None, metavar="ITERS",
+                    help="run the measured step-time benchmark instead of "
+                         "compile probes: benchmarks/step_bench.py grid "
+                         "(schedule x pp on the 8-fake-device mesh), "
+                         "ITERS timed windows per config, rows appended "
+                         "newest-wins to benchmarks/artifacts/"
+                         "BENCH_step.json; spawned as a subprocess so its "
+                         "device count is independent of this dry-run's")
     ap.add_argument("--pp-chunks", type=int, default=None,
                     help="virtual stages per rank (interleaved: >=2; "
                          "defaults to 2 for interleaved/dualpipe)")
@@ -640,6 +650,14 @@ def main() -> int:
                     help="override per-pod grid, e.g. 32x8")
     ap.add_argument("--tag-suffix", default="")
     args = ap.parse_args()
+    if args.bench_steps is not None:
+        import subprocess
+        bench = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                             "benchmarks", "step_bench.py")
+        cmd = [sys.executable, os.path.abspath(bench),
+               "--iters", str(args.bench_steps)]
+        env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+        return subprocess.call(cmd, env=env)
     mesh_shape = tuple(int(x) for x in args.mesh_shape.split("x")) \
         if args.mesh_shape else None
     if args.tp:
@@ -668,7 +686,7 @@ def main() -> int:
         ap.error("--ep applies to the per-rank --pp probes; pass --pp N")
     failures = 0
     n_chunks = args.pp_chunks if args.pp_chunks is not None \
-        else (1 if args.schedule == "1f1b" else 2)
+        else (1 if args.schedule in ("1f1b", "zb1p") else 2)
     for a, s in combos:
         if args.pp > 1:
             rec = run_pp(a, s, args.pp, multi_pod=args.multi_pod,

@@ -1,5 +1,6 @@
 from .loop import TrainConfig, make_train_step, train
 from .pipeline_loop import make_pipeline_train_step
+from .timing import TimingResult, merge_rows, time_callable
 
-__all__ = ["TrainConfig", "make_pipeline_train_step", "make_train_step",
-           "train"]
+__all__ = ["TimingResult", "TrainConfig", "make_pipeline_train_step",
+           "make_train_step", "merge_rows", "time_callable", "train"]

@@ -1,10 +1,14 @@
 """Pipeline-parallel train step driven by a pluggable schedule.
 
 ``make_pipeline_train_step(model, cfg, mesh, schedule=..., n_chunks=...)``
-builds one jit-able step that runs any of the three schedules in
+builds one jit-able step that runs any of the four schedules in
 ``train.schedules`` / ``core.schedules`` — plain ``1f1b`` (the default,
 PR 1's GPipe-fill + 1F1B steady state), Megatron-style ``interleaved``
-virtual stages, or the ``dualpipe`` bidirectional schedule — over the
+virtual stages, the ``dualpipe`` bidirectional schedule, or the ``zb1p``
+zero-bubble schedule (ZB-H1: the B tick stashes the layer gradients in a
+per-rank pending fp32 buffer and the schedule's W ticks fold the stash
+into the accumulator — deferred weight-gradient work; shared embed/head/
+final-norm grads accumulate at B, outside the W bookkeeping) — over the
 ``pipe`` mesh axis.  Arguments:
 
 * ``model``: a ``models.build_model`` Model (decoder-only dense/MoE
@@ -251,11 +255,13 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     flags_all = jnp.asarray(part.moe_flag)
     first_all = jnp.asarray(part.first_flag)        # (S, V)
     last_all = jnp.asarray(part.last_flag)
+    zb = schedule == "zb1p"
     tabs = {k: jnp.asarray(getattr(tab, k)) for k in (
         "f_act", "f_micro", "f_chunk", "f_xidx",
         "b_act", "b_micro", "b_chunk", "b_xidx", "b_gidx",
         "rfd_act", "rfd_idx", "rfu_act", "rfu_idx",
-        "rgd_act", "rgd_idx", "rgu_act", "rgu_idx")}
+        "rgd_act", "rgd_idx", "rgu_act", "rgu_idx")
+        + (("w_act", "w_chunk") if zb else ())}
     # gate every permute on its own table: 1f1b/interleaved move forwards
     # down-ring and gradients up-ring only — permuting the unused payload
     # would double boundary traffic per tick
@@ -326,7 +332,10 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             return jax.tree.map(lambda a: _dyn(a, c), p_layers)
 
         def tick(carry, t):
-            xbuf, gbuf, gl, gsh, loss, aux_acc = carry
+            if zb:
+                xbuf, gbuf, gl, gsh, loss, aux_acc, pend = carry
+            else:
+                xbuf, gbuf, gl, gsh, loss, aux_acc = carry
 
             # -- forward: the schedule's (micro, chunk) for this tick ------
             fa = tabs["f_act"][t, d]
@@ -363,12 +372,40 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             # psummed over the data axes below)
             daux = 0.01 * ba / data_size
             dpl, dps, dx = vjp_fn((dy_cot, dce, daux))
-            cur = jax.tree.map(lambda a: _dyn(a, bc), gl)
-            upd = jax.tree.map(lambda a, g_: a + g_.astype(jnp.float32),
-                               cur, dpl)
-            gl = jax.tree.map(
-                lambda a, u: jax.lax.dynamic_update_index_in_dim(a, u, bc, 0),
-                gl, upd)
+            if zb:
+                # zb1p: B computes the layer grads but *stashes* them in the
+                # pending buffer; the schedule's W op (below) folds the stash
+                # into the accumulator — deferred weight-gradient work, the
+                # executor's rendering of ZB's B/W split.  Shared (embed/
+                # head/final-norm) grads accumulate at B as before: they sit
+                # outside the per-chunk W bookkeeping.
+                cur = jax.tree.map(lambda a: _dyn(a, bc), pend)
+                upd = jax.tree.map(lambda a, g_: a + g_.astype(jnp.float32),
+                                   cur, dpl)
+                pend = jax.tree.map(
+                    lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                        a, u, bc, 0),
+                    pend, upd)
+                wa = tabs["w_act"][t, d]
+                wc = tabs["w_chunk"][t, d]
+                pc = jax.tree.map(lambda a: _dyn(a, wc), pend)
+                gc = jax.tree.map(lambda a: _dyn(a, wc), gl)
+                gl = jax.tree.map(
+                    lambda a, g_, p_: jax.lax.dynamic_update_index_in_dim(
+                        a, g_ + wa * p_, wc, 0),
+                    gl, gc, pc)
+                pend = jax.tree.map(
+                    lambda a, p_: jax.lax.dynamic_update_index_in_dim(
+                        a, (1.0 - wa) * p_, wc, 0),
+                    pend, pc)
+            else:
+                cur = jax.tree.map(lambda a: _dyn(a, bc), gl)
+                upd = jax.tree.map(lambda a, g_: a + g_.astype(jnp.float32),
+                                   cur, dpl)
+                gl = jax.tree.map(
+                    lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                        a, u, bc, 0),
+                    gl, upd)
             gsh = jax.tree.map(lambda a, g_: a + g_.astype(jnp.float32),
                                gsh, dps)
 
@@ -394,18 +431,23 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             if use_b_up:
                 dx_up = jax.lax.ppermute(dx, "pipe", ring_up)
                 gbuf = write(gbuf, tabs["rgu_act"], tabs["rgu_idx"], dx_up)
-            return (xbuf, gbuf, gl, gsh, loss, aux_acc), None
+            out = (xbuf, gbuf, gl, gsh, loss, aux_acc)
+            return out + ((pend,) if zb else ()), None
 
+        zeros_like_f32 = lambda tree: jax.tree.map(
+            lambda a: jnp.zeros(a.shape, jnp.float32), tree)
         init = (jnp.zeros((V * XS, b_loc, s_loc, h), adt),
                 jnp.zeros((V * GS, b_loc, s_loc, h), adt),
-                jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
-                             p_layers),
-                jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32),
-                             p_shared),
+                zeros_like_f32(p_layers),
+                zeros_like_f32(p_shared),
                 jnp.zeros((), jnp.float32),
                 jnp.zeros((), jnp.float32))
-        (_, _, gl, gsh, loss, aux_acc), _ = jax.lax.scan(
-            tick, init, jnp.arange(T))
+        if zb:
+            # the pending-dW stash: one fp32 layer-grad copy per rank — the
+            # memory zb1p trades for its bubble (estimate_memory prices it)
+            init = init + (zeros_like_f32(p_layers),)
+        fin, _ = jax.lax.scan(tick, init, jnp.arange(T))
+        _, _, gl, gsh, loss, aux_acc = fin[:6]
 
         g = dict(gsh, layers=gl)
         if sp or ep > 1:

@@ -89,6 +89,12 @@ class ExecTables:
     rgd_idx: np.ndarray
     rgu_act: np.ndarray     # grad payload via up-ring
     rgu_idx: np.ndarray
+    # deferred weight-gradient flush (zb1p's W ops; all-zero otherwise):
+    # at tick t rank r folds its pending chunk-``w_chunk`` gradient stash
+    # into the accumulator (see train.pipeline_loop)
+    w_act: np.ndarray = None
+    w_micro: np.ndarray = None
+    w_chunk: np.ndarray = None
 
 
 def _color_intervals(intervals: List[Tuple[int, int, int]]) -> Dict[int, int]:
@@ -116,6 +122,8 @@ def build_exec_tables(sched: PipelineSchedule) -> ExecTables:
     own = [[sched.owner(g, m) for g in range(G)] for m in range(M)]
     tF = {(m, g): times[("F", m, g)] for m in range(M) for g in range(G)}
     tB = {(m, g): times[("B", m, g)] for m in range(M) for g in range(G)}
+    tW = {(m, g): times[("W", m, g)] for m in range(M) for g in range(G)
+          if ("W", m, g) in times}
 
     # --- buffer slot assignment (per rank-chunk interval colouring) -------
     xiv: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
@@ -143,6 +151,7 @@ def build_exec_tables(sched: PipelineSchedule) -> ExecTables:
         z(np.float32)
     rfd_a, rfd_i, rfu_a, rfu_i = z(np.float32), z(), z(np.float32), z()
     rgd_a, rgd_i, rgu_a, rgu_i = z(np.float32), z(), z(np.float32), z()
+    w_act, w_micro, w_chunk = z(np.float32), z(), z()
 
     for m in range(M):
         for g in range(G):
@@ -174,6 +183,12 @@ def build_exec_tables(sched: PipelineSchedule) -> ExecTables:
                 a[t, r2] = 1.0
                 i[t, r2] = c2 * gs + gslot[(r2, c2)][m]
 
+            if (m, g) in tW:
+                t = tW[(m, g)]
+                w_act[t, r] = 1.0
+                w_micro[t, r] = m
+                w_chunk[t, r] = c
+
     return ExecTables(
         schedule=sched.name, pp=pp, n_chunks=v, n_micro=M, n_stages=G, T=T,
         x_slots=xs, g_slots=gs,
@@ -182,4 +197,5 @@ def build_exec_tables(sched: PipelineSchedule) -> ExecTables:
         b_gidx=b_gidx,
         fsend_down=fsd, fsend_up=fsu, bsend_down=bsd, bsend_up=bsu,
         rfd_act=rfd_a, rfd_idx=rfd_i, rfu_act=rfu_a, rfu_idx=rfu_i,
-        rgd_act=rgd_a, rgd_idx=rgd_i, rgu_act=rgu_a, rgu_idx=rgu_i)
+        rgd_act=rgd_a, rgd_idx=rgd_i, rgu_act=rgu_a, rgu_idx=rgu_i,
+        w_act=w_act, w_micro=w_micro, w_chunk=w_chunk)

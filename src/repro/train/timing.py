@@ -1,0 +1,109 @@
+"""Shared wall-clock timing for the benchmark harnesses.
+
+Measuring jitted JAX callables correctly needs three things the naive
+``time.perf_counter`` loop gets wrong:
+
+* **Warmup outside the timed region** — the first call pays tracing +
+  compilation (seconds), which would swamp a microsecond-scale kernel.
+* **Blocking inside each timed window** — JAX dispatch is async; without
+  ``jax.block_until_ready`` the "measured" time is enqueue latency.
+* **Median, not mean** — a single OS scheduler hiccup inflates a mean
+  arbitrarily; the median of k independent windows is robust to it.
+  (``benchmarks/kernel_bench.py`` historically reported a mean over one
+  blocked loop; it now routes through :func:`time_callable`.)
+
+The module is deliberately dependency-light (``jax`` only when a result
+needs blocking) so ``benchmarks/step_bench.py`` can import the row-merge
+helper before setting ``XLA_FLAGS`` and importing jax.
+
+Also here: :func:`merge_rows`, the newest-wins dedupe both BENCH_*.json
+writers share — the same policy ``benchmarks/validate_memory`` applies to
+its per-config artifacts (latest row for a config key replaces older ones).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingResult:
+    """Per-window wall-clock samples for one callable."""
+
+    times_s: Tuple[float, ...]    # one entry per timed window, seconds
+    warmup_s: float               # first (untimed-loop) call: trace+compile
+
+    @property
+    def median_s(self) -> float:
+        return statistics.median(self.times_s)
+
+    @property
+    def mean_s(self) -> float:
+        return statistics.fmean(self.times_s)
+
+    @property
+    def min_s(self) -> float:
+        return min(self.times_s)
+
+    @property
+    def median_us(self) -> float:
+        return self.median_s * 1e6
+
+
+def time_callable(fn: Callable[..., Any], *args: Any,
+                  iters: int = 5, warmup: int = 1,
+                  block: bool = True) -> TimingResult:
+    """Median-of-``iters`` wall clock for ``fn(*args)``.
+
+    ``warmup`` calls run first (blocked, untimed) so compilation and cache
+    population never land in a sample; the first warmup's duration is kept
+    as ``warmup_s`` for reporting compile cost.  Each of the ``iters``
+    timed windows wraps exactly one call and blocks on its result before
+    reading the clock, so async dispatch cannot shrink a sample.
+
+    ``block=False`` skips ``jax.block_until_ready`` for callables that are
+    already synchronous (pure-Python work in tests) — and keeps this module
+    importable without jax.
+    """
+    if iters < 1 or warmup < 0:
+        raise ValueError(f"need iters >= 1, warmup >= 0 (got {iters}, {warmup})")
+
+    def ready(x):
+        if block:
+            import jax
+            return jax.block_until_ready(x)
+        return x
+
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(warmup):
+        out = ready(fn(*args))
+    warmup_s = time.perf_counter() - t0
+    del out
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        ready(fn(*args))
+        samples.append(time.perf_counter() - t0)
+    return TimingResult(times_s=tuple(samples), warmup_s=warmup_s)
+
+
+def merge_rows(existing: Sequence[Dict[str, Any]],
+               new: Sequence[Dict[str, Any]],
+               key_fields: Sequence[str]) -> List[Dict[str, Any]]:
+    """Newest-wins merge of benchmark rows on ``key_fields``.
+
+    ``new`` rows replace ``existing`` rows with the same config key (missing
+    key fields compare as None, so schema growth keeps old rows distinct
+    rather than silently clobbering them).  Order: stable sort by the
+    stringified key, matching ``validate_memory``'s artifact tables so
+    re-runs produce minimal diffs in the committed JSON.
+    """
+    by_key: Dict[Tuple[str, ...], Dict[str, Any]] = {}
+    for row in list(existing) + list(new):
+        key = tuple(str(row.get(f)) for f in key_fields)
+        by_key[key] = row
+    return [by_key[k] for k in sorted(by_key)]

@@ -360,11 +360,16 @@ def test_ep_violations_listed_and_executor_guards():
 
 def test_planner_surfaces_runnable_ep():
     """plan() over a small world produces at least one runnable EP>1 entry
-    for an MoE model (the acceptance criterion's 'no longer rejecting')."""
+    for an MoE model (the acceptance criterion's 'no longer rejecting'),
+    and the estimator-only grouped-EP configs carry a precise reason.
+    Runnable configs rank first (by predicted step time), so the
+    estimator-only entries live past the runnable block — probe with an
+    uncapped top_k."""
     from repro.core.planner import plan
     entries = plan(OLMOE, 16, 96 * 2 ** 30, seq_len=4096, top_k=50)
     assert any(e.cfg.ep > 1 and e.runnable for e in entries), \
         [(e.cfg.describe(), e.why_not_runnable) for e in entries[:10]]
-    kinds = {e.why_not_runnable for e in entries
+    full = plan(OLMOE, 16, 96 * 2 ** 30, seq_len=4096, top_k=10 ** 6)
+    kinds = {e.why_not_runnable for e in full
              if e.cfg.ep > 1 and not e.runnable}
     assert any("estimator-only" in w for w in kinds)

@@ -1,0 +1,180 @@
+"""Step-bench harness unit tests (no jax, no subprocess, no devices):
+
+* ``repro.train.timing.time_callable`` — median-of-k is monotone under an
+  injected sleep, warmup calls never land in the samples, bad arguments
+  raise;
+* ``repro.train.timing.merge_rows`` — newest-wins dedupe on the full
+  config key, stable sorted output, schema growth keeps old rows distinct;
+* ``core.steptime.mfu`` — hand-computed dense case (tiny spec, FLOPs done
+  by hand from the PaLM 3× convention);
+* ``benchmarks.step_bench.check_direction`` — accepts a consistent
+  ranking, flags an inverted one, treats close predictions as ties, and
+  never compares across chunk granularities.
+
+The measured grid itself runs in ``benchmarks/step_bench.py`` (CI's
+step-bench-smoke job); these tests pin the harness logic that the
+committed BENCH_step.json rows and the CI direction gate depend on.
+"""
+
+import time
+
+import pytest
+
+from benchmarks.step_bench import KEY_FIELDS, check_direction
+from repro.train.timing import TimingResult, merge_rows, time_callable
+
+
+# ---------------------------------------------------------------------------
+# time_callable
+# ---------------------------------------------------------------------------
+
+def test_median_monotone_under_injected_sleep():
+    """A callable that sleeps 2x as long must report >= the median of the
+    faster one — the basic sanity the whole benchmark rests on."""
+    fast = time_callable(lambda: time.sleep(0.002), iters=5, warmup=1,
+                         block=False)
+    slow = time_callable(lambda: time.sleep(0.008), iters=5, warmup=1,
+                         block=False)
+    assert slow.median_s > fast.median_s
+    assert fast.median_s >= 0.002 and slow.median_s >= 0.008
+    assert len(fast.times_s) == 5
+
+
+def test_warmup_not_in_samples():
+    """First (compile-like) call is expensive; it must land in warmup_s,
+    never in the timed samples or the median."""
+    calls = []
+
+    def fn():
+        calls.append(None)
+        time.sleep(0.05 if len(calls) == 1 else 0.001)
+
+    r = time_callable(fn, iters=4, warmup=1, block=False)
+    assert len(calls) == 5                 # 1 warmup + 4 timed
+    assert r.warmup_s >= 0.05
+    assert r.median_s < 0.05 / 2
+    assert max(r.times_s) < 0.05 / 2
+
+
+def test_time_callable_passes_args_and_validates():
+    seen = []
+    r = time_callable(lambda a, b: seen.append((a, b)), 1, 2,
+                      iters=2, warmup=0, block=False)
+    assert seen == [(1, 2)] * 2 and isinstance(r, TimingResult)
+    with pytest.raises(ValueError):
+        time_callable(lambda: None, iters=0, block=False)
+    with pytest.raises(ValueError):
+        time_callable(lambda: None, warmup=-1, block=False)
+
+
+def test_timing_result_stats():
+    r = TimingResult(times_s=(3.0, 1.0, 2.0), warmup_s=0.0)
+    assert r.median_s == 2.0 and r.min_s == 1.0
+    assert abs(r.mean_s - 2.0) < 1e-12 and r.median_us == 2e6
+
+
+# ---------------------------------------------------------------------------
+# merge_rows (the BENCH_*.json dedupe)
+# ---------------------------------------------------------------------------
+
+def _row(schedule, pp, median):
+    r = {k: None for k in KEY_FIELDS}
+    r.update(schedule=schedule, pp=pp, arch="a", median_s=median)
+    return r
+
+
+def test_merge_rows_newest_wins():
+    old = [_row("1f1b", 2, 1.0), _row("zb1p", 2, 2.0)]
+    new = [_row("zb1p", 2, 1.5), _row("dualpipe", 4, 3.0)]
+    merged = merge_rows(old, new, KEY_FIELDS)
+    assert len(merged) == 3
+    by = {(r["schedule"], r["pp"]): r for r in merged}
+    assert by[("zb1p", 2)]["median_s"] == 1.5       # re-run replaced the row
+    assert by[("1f1b", 2)]["median_s"] == 1.0       # untouched row survives
+    # deterministic order: stable re-runs produce minimal JSON diffs
+    assert merged == merge_rows(old, new, KEY_FIELDS)
+
+
+def test_merge_rows_missing_key_fields_stay_distinct():
+    """A row written before a key field existed must not be clobbered by a
+    row that has it (both keys stringify differently)."""
+    old = [{"schedule": "1f1b", "median_s": 1.0}]
+    new = [dict(_row("1f1b", 2, 9.9))]
+    assert len(merge_rows(old, new, KEY_FIELDS)) == 2
+
+
+# ---------------------------------------------------------------------------
+# MFU, hand-computed
+# ---------------------------------------------------------------------------
+
+def test_mfu_hand_computed_dense():
+    """Tiny dense spec, FLOPs by hand: proj 2/param/token, attention
+    4·t·s·n_h·d, head 2·t·h·V; step = 3× fwd; MFU = step_flops /
+    (t · peak · n_dev)."""
+    from repro.core.notation import FamilyKind, ModelSpec
+    from repro.core.steptime import mfu, model_fwd_flops, step_flops
+
+    spec = ModelSpec(name="tiny", family=FamilyKind.DENSE, n_layers=2, h=4,
+                     n_h=2, n_kv=2, d_head=2, h_ff=8, vocab=16)
+    t, s = 8, 8
+    # per layer: qkvo 4·h·(n_h·d) = 4·4·4 = 64 params, mlp 3·h·h_ff = 96
+    # params -> proj flops 2·t·160; attn 4·t·s·n_h·d = 4·t·8·4
+    layer = 2 * t * (4 * 4 * 4 + 3 * 4 * 8) + 4 * t * s * 2 * 2
+    fwd = 2 * layer + 2 * t * 4 * 16          # 2 layers + head
+    assert model_fwd_flops(spec, t, s) == pytest.approx(fwd)
+    assert step_flops(spec, t, s) == pytest.approx(3 * fwd)
+    assert mfu(2.0, spec, t, s, peak_flops_per_s=100.0, n_devices=4) == \
+        pytest.approx(3 * fwd / (2.0 * 100.0 * 4))
+    with pytest.raises(ValueError):
+        mfu(0.0, spec, t, s, peak_flops_per_s=100.0)
+    with pytest.raises(ValueError):
+        mfu(1.0, spec, t, s, peak_flops_per_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# check_direction (the CI gate)
+# ---------------------------------------------------------------------------
+
+def _bench_row(schedule, measured, predicted, *, pp=2, n_chunks=1):
+    return {"arch": "a", "schedule": schedule, "pp": pp, "tp": 2,
+            "sp": False, "n_micro": 4, "n_chunks": n_chunks, "batch": 8,
+            "seq_len": 32, "median_s": measured, "predicted_s": predicted}
+
+
+def test_direction_ok_on_consistent_ranking():
+    rows = [_bench_row("1f1b", 1.0, 1.0), _bench_row("zb1p", 1.2, 1.18),
+            _bench_row("dualpipe", 1.5, 1.4)]
+    assert check_direction(rows) == []
+
+
+def test_direction_fails_loudly_on_inversion():
+    """Predicted says zb1p clearly faster than dualpipe; measured says the
+    opposite -> exactly one violation naming both schedules."""
+    rows = [_bench_row("zb1p", 1.6, 1.0), _bench_row("dualpipe", 1.2, 1.4)]
+    bad = check_direction(rows)
+    assert len(bad) == 1
+    assert "zb1p" in bad[0] and "dualpipe" in bad[0]
+
+
+def test_direction_close_predictions_are_ties():
+    """Inside the min_gap band either measured order passes — CPU noise
+    cannot flake the gate."""
+    rows = [_bench_row("1f1b", 1.3, 1.00), _bench_row("zb1p", 1.0, 1.05)]
+    assert check_direction(rows, min_gap=0.10) == []
+    # ...but the same pair fails once the predicted gap clears the band
+    rows = [_bench_row("1f1b", 1.3, 1.00), _bench_row("zb1p", 1.0, 1.25)]
+    assert len(check_direction(rows, min_gap=0.10)) == 1
+
+
+def test_direction_never_compares_across_chunk_granularity():
+    """interleaved (n_chunks=2) lives in its own cell: half-size chunks
+    make its per-tick cost incomparable on an overhead-dominated host."""
+    rows = [_bench_row("interleaved", 0.9, 2.0, n_chunks=2),
+            _bench_row("dualpipe", 1.5, 1.0)]
+    assert check_direction(rows) == []
+
+
+def test_direction_separates_pp_cells():
+    rows = [_bench_row("1f1b", 1.0, 1.0, pp=2),
+            _bench_row("zb1p", 0.5, 2.0, pp=4)]
+    assert check_direction(rows) == []

@@ -1,0 +1,187 @@
+"""ZB-H1 zero-bubble schedule invariants (``schedule="zb1p"``).
+
+The zero-bubble family (Qi et al.) splits each backward into B (input
+gradient, on the critical path) and W (weight gradient, free to slide into
+bubbles).  ZB-H1 keeps 1F1B's activation residency — B still retires the
+microbatch's activations — and fills the 1F1B cooldown with W ticks, so
+its canonical bubble is strictly smaller for pp >= 2 while its in-flight
+peak per rank is exactly 1F1B's ``min(M, pp - r)``.
+
+Verified here, deterministically over the ``test_schedules.py``-style grid
+and widened by hypothesis when installed:
+
+* exactly-once F, B *and* W per (microbatch, stage); W strictly after its
+  B; all of ``PipelineSchedule.check()``'s dep/capacity invariants;
+* closed forms: canonical makespan ``3M + 2(pp-1) - min(M-1, pp-1)``,
+  per-rank in-flight peak ``min(M, pp-r)`` == ``schedule_in_flight`` ==
+  the simulated ``in_flight_series`` peak, executor tick count exactly
+  ``exec_ticks(1f1b) + 1`` (one drain tick for the last W);
+* ``core.steptime.bubble_fraction``: zb1p <= 1f1b at equal (pp, M), with
+  the canonical idle count ``2(pp-1) - min(M-1, pp-1)`` per rank;
+* the executor tables route zb1p's boundary tensors exactly as 1f1b's
+  (W adds no traffic), and ``w_act``/``w_micro``/``w_chunk`` mark each
+  (m, stage) exactly once, after its B tick;
+* ``estimate_memory(schedule="zb1p")`` carries the fp32 pending-dW stash
+  in the grads column (activations unchanged vs 1f1b), and the planner
+  prices zb1p configs via ``predicted_step_s``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.activations import schedule_in_flight
+from repro.core.schedules import (PipelineSchedule, exec_tick_times,
+                                  make_schedule)
+from repro.core.steptime import bubble_fraction, bubble_stats, exec_ticks
+from repro.train.schedules import build_exec_tables
+
+GRID = [(pp, m) for pp in (1, 2, 3, 4, 5) for m in (1, 2, 4, 5, 8)]
+
+
+def _canonical_makespan(sched: PipelineSchedule) -> int:
+    return max(op.t for op in sched.ticks) + 1
+
+
+@pytest.mark.parametrize("pp,m", GRID)
+def test_zb1p_invariants_and_closed_forms(pp, m):
+    sched = make_schedule("zb1p", pp, m)
+    sched.check()   # exactly-once F/B/W, W after B, deps, rank capacity
+    # in-flight peak: B retires activations, so residency is exactly 1F1B's
+    peaks = [sched.rank_peak_in_flight(r) for r in range(pp)]
+    assert peaks == [min(m, pp - r) for r in range(pp)]
+    assert peaks == [schedule_in_flight(pp, r, m, schedule="zb1p")
+                     for r in range(pp)]
+    # canonical makespan: 3 ops per micro on the last rank, 2(pp-1) ramp,
+    # minus the W ops that overlap the cooldown
+    assert _canonical_makespan(sched) == \
+        3 * m + 2 * (pp - 1) - min(m - 1, pp - 1)
+
+
+@pytest.mark.parametrize("pp,m", GRID)
+def test_zb1p_bubble_below_1f1b(pp, m):
+    zb = bubble_stats("zb1p", pp, m)
+    base = bubble_stats("1f1b", pp, m)
+    assert zb.bubble_fraction <= base.bubble_fraction + 1e-12
+    if pp >= 2 and m >= 2:
+        assert zb.bubble_fraction < base.bubble_fraction
+    # canonical idle per rank: the 1f1b warmup/cooldown 2(pp-1) minus the
+    # min(M-1, pp-1) slots W fills
+    sched = make_schedule("zb1p", pp, m)
+    T = _canonical_makespan(sched)
+    per_rank_ops = [0] * pp
+    for op in sched.ticks:
+        per_rank_ops[op.rank] += 1
+    for r in range(pp):
+        assert T - per_rank_ops[r] == 2 * (pp - 1) - min(m - 1, pp - 1)
+
+
+@pytest.mark.parametrize("pp,m", [(2, 2), (2, 4), (3, 5), (4, 4), (4, 8)])
+def test_zb1p_exec_one_drain_tick(pp, m):
+    """The masked executor packs one F and one B per tick; W rides the same
+    tick as a B except the very last W, which needs one drain tick — so
+    zb1p's executor timeline is exactly 1f1b's plus one."""
+    assert exec_ticks("zb1p", pp, m) == exec_ticks("1f1b", pp, m) + 1
+
+
+@pytest.mark.parametrize("pp,m", [(2, 4), (3, 5), (4, 8)])
+def test_zb1p_exec_tables(pp, m):
+    sched = make_schedule("zb1p", pp, m)
+    tab = build_exec_tables(sched)
+    assert tab.w_act is not None
+    # every (micro, rank) W fires exactly once, strictly after its B
+    times = exec_tick_times(sched)
+    seen = set()
+    for t in range(tab.T):
+        for r in range(pp):
+            if tab.w_act[t, r] > 0:
+                mm = int(tab.w_micro[t, r])
+                assert (mm, r) not in seen
+                seen.add((mm, r))
+                assert times[("B", mm, r)] < t or \
+                    times[("B", mm, r)] == t  # W may share its B's tick
+                assert int(tab.w_chunk[t, r]) == 0
+    assert seen == {(mm, r) for mm in range(m) for r in range(pp)}
+    # 1f1b activates no W columns
+    base = build_exec_tables(make_schedule("1f1b", pp, m))
+    assert base.w_act is None or not np.any(base.w_act)
+
+
+def test_zb1p_boundary_routing_matches_1f1b():
+    """W moves no boundary tensors: the x/g ring routing replay of
+    ``test_schedules.py`` holds verbatim for zb1p."""
+    from test_schedules import _check_exec_routing
+    for pp, m in [(2, 4), (3, 5), (4, 8)]:
+        _check_exec_routing(make_schedule("zb1p", pp, m))
+
+
+def test_zb1p_needs_single_chunk():
+    with pytest.raises(ValueError):
+        make_schedule("zb1p", 4, 8, n_chunks=2)
+
+
+def test_zb1p_memory_carries_pending_stash():
+    """estimate_memory(schedule='zb1p'): grads = 1f1b's + one fp32 copy of
+    the rank's *layer* grads (the scan-carry stash is DP-replicated and
+    excludes the embed/head grads, which accumulate at B directly)."""
+    from repro.configs import get_spec
+    from repro.core import estimate_memory
+    from repro.core.parallel_config import ParallelConfig, ZeROStage
+    from repro.core.params import device_params
+
+    spec = get_spec("qwen2-1.5b")
+    cfg = ParallelConfig(dp=2, tp=2, pp=2, zero=ZeROStage.OS,
+                         micro_batch=1, seq_len=2048)
+    for r in range(cfg.pp):
+        zb = estimate_memory(spec, cfg, stage=r, schedule="zb1p")
+        base = estimate_memory(spec, cfg, stage=r, schedule="1f1b")
+        assert zb.activations == base.activations
+        assert zb.params == base.params and zb.optimizer == base.optimizer
+        from repro.core.activations import rank_chunk_layers
+        layers = [l for ls in rank_chunk_layers(spec, cfg.pp,
+                                                schedule="zb1p")[r] for l in ls]
+        dev = device_params(spec, cfg, layers=layers)
+        assert zb.grads == base.grads + (dev.total - dev.embed) * 4
+
+
+def test_planner_prices_zb1p():
+    from repro.configs import get_spec
+    from repro.core import plan
+
+    spec = get_spec("qwen2-1.5b")
+    entries = plan(spec, 8, 80 * 2**30, seq_len=2048, top_k=50,
+                   schedule="zb1p")
+    priced = [e for e in entries if e.runnable and e.cfg.pp > 1]
+    assert priced, "no runnable pp>1 zb1p configs priced"
+    assert all(e.predicted_step_s and e.predicted_step_s > 0 for e in priced)
+    # runnable entries lead and are sorted by predicted step time
+    preds = [e.predicted_step_s for e in entries if e.runnable
+             and e.predicted_step_s is not None]
+    assert preds == sorted(preds)
+
+
+# ---------------------------------------------------------------------------
+# Property-based widening (mirrors test_schedules.py: skipped without
+# hypothesis, deterministic grid above unaffected)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(pp=st.integers(1, 6), m=st.integers(1, 12))
+    def test_hyp_zb1p(pp, m):
+        sched = make_schedule("zb1p", pp, m)
+        sched.check()
+        assert [sched.rank_peak_in_flight(r) for r in range(pp)] == \
+            [min(m, pp - r) for r in range(pp)]
+        assert _canonical_makespan(sched) == \
+            3 * m + 2 * (pp - 1) - min(m - 1, pp - 1)
+        assert bubble_fraction("zb1p", pp, m) <= \
+            bubble_fraction("1f1b", pp, m) + 1e-12
+        if pp > 1:
+            from test_schedules import _check_exec_routing
+            _check_exec_routing(sched)
