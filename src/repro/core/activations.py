@@ -289,9 +289,12 @@ def schedule_in_flight(pp: int, rank: int, n_micro: Optional[int] = None, *,
       (each unit is one of the rank's v *chunks*, ~1/v of its layers)
     * ``dualpipe``:    min(⌈M/2⌉, pp - rank) + min(⌊M/2⌋, rank + 1)
       (≈ pp + 1 on every rank — DualPipe's near-flat profile)
-    * ``zb1p``:        min(M, pp - rank) — same as 1f1b: activations still
-      retire at B (input-gradient); the deferred W ops hold *gradient*
-      state, priced separately by ``estimate_memory(schedule="zb1p")``
+    * ``zb1p``:        min(M, pp - rank) — same as 1f1b: the full-layer
+      activation stash still retires at B (which runs the whole vjp); the
+      deferred W ops instead park each pending microbatch's fp32
+      pending-dW in the executor's stash ring until the W flush
+      (``core.schedules.zb_pending_peak``), priced as grad memory by
+      ``estimate_memory(schedule="zb1p")``
 
     ``n_micro=None`` gives the M→∞ steady-state value.
     """

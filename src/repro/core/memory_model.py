@@ -71,12 +71,19 @@ def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
     layer chunk the rank holds under that schedule — under ``dualpipe`` each
     rank holds two model chunks, the schedule's 2× parameter cost; under
     ``interleaved`` a rank holds ``n_chunks`` virtual stages.  Under
-    ``zb1p`` activations match 1f1b (B still retires them) but the grads
-    term carries one extra fp32 copy of the rank's *layer* gradients — the
-    executor's pending-dW stash, the memory zero-bubble trades for its
-    bubble (the stash is a scan carry, so it is DP-replicated and does not
-    shard under ZeRO).  The plain ``stage=``/``in_flight_microbatches=``
-    path is the schedule-unaware paper view and is unchanged.
+    ``zb1p`` the activation residency matches 1f1b (B — which runs the
+    full chunk vjp — still retires the microbatch), but the grads term
+    adds the W stash: between a microbatch's B tick and its deferred W
+    tick the executor parks that microbatch's fp32 pending-dW (a full
+    copy of the rank's per-layer gradients) in a scan-carried slot ring,
+    and the W tick merely flushes it into the accumulator.  Each pending
+    microbatch therefore costs one fp32 layer-grad copy, and the ring is
+    allocated uniformly across ranks at the schedule-wide peak pendency
+    ``max(core.schedules.zb_pending_peak)`` — the memory zero-bubble
+    trades for its bubble.  The stash is per-device whole-grad state
+    (not ZeRO-shardable: it is flushed before any reduce).  The plain
+    ``stage=``/``in_flight_microbatches=`` path is the schedule-unaware
+    paper view and is unchanged.
     """
     if schedule is not None and not training:
         raise ValueError(
@@ -96,11 +103,22 @@ def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
         layers = [l for ls in chunks for l in ls]
         state = zero_memory(spec, cfg, layers=layers)
         params, grads, opt = state.params, state.grads, state.optimizer
-        if schedule == "zb1p":
-            dev = device_params(spec, cfg, layers=layers)
-            grads += (dev.total - dev.embed) * 4   # fp32 pending-dW stash
         acts = schedule_activation_bytes(spec, cfg, rank, schedule=schedule,
                                          n_chunks=n_chunks, n_micro=n_micro)
+        if schedule == "zb1p":
+            # The B→W stash: one fp32 pending-dW copy of the rank's
+            # per-layer grads per pending microbatch, parked in the
+            # executor's scan-carried stash ring from B until the deferred
+            # W flushes it (see train.schedules — the stash colouring
+            # windows run B→W, so the ring depth IS the peak pendency).
+            # SPMD allocates the ring uniformly, so every rank pays the
+            # schedule-wide max; shared (embed/head/final-norm) grads
+            # accumulate at B and never enter the stash.
+            from .schedules import zb_pending_peak
+            m_eff = n_micro if n_micro is not None else 2 * cfg.pp
+            pend = max(zb_pending_peak(cfg.pp, m_eff))
+            dev = device_params(spec, cfg, layers=layers)
+            grads += pend * (dev.total - dev.embed) * 4
         subtotal = params + grads + opt + acts + cfg.comm_buffer_bytes
         frag = int(subtotal * cfg.fragmentation)
         return MemoryEstimate(params=params, grads=grads, optimizer=opt,

@@ -244,14 +244,58 @@ def assign_ticks(orders: List[List[_Queue]], n_stages: int, *,
     B(m,g) — and (iii) rank capacity.
 
     ``fb_per_tick=False`` is the canonical timeline (one op per rank per
-    tick; B(m, last) strictly after F(m, last)); ``fb_per_tick=True`` is the
-    executor timeline (one F, one B *and* one W per rank per tick; the last
-    stage's backward may share its forward's tick — the 1F1B hand-off)."""
+    tick; B(m, last) strictly after F(m, last); queue parity honoured —
+    dualpipe's alternating directions).  ``fb_per_tick=True`` is the
+    executor timeline: one F and one B per rank per tick (the last stage's
+    backward may share its forward's tick — the 1F1B hand-off), queue
+    parity ignored — the executor's tick body runs one forward *and* one
+    backward slot, so a dualpipe rank packs F(direction A) with
+    B(direction B) in the same tick, DualPipe's overlapped dual-stream
+    shape — and W ops land only on ticks where the rank runs no F and no
+    B: dedicated W-only ticks whose cond branch costs a weight-grad pass
+    instead of a full F+B, the executor rendering of ZB-H1's
+    fill-the-bubble-with-W."""
     assigned: Dict[Tuple[str, int, int], int] = {}
     ptrs = [[0] * len(qs) for qs in orders]
     remaining = sum(len(q.ops) for qs in orders for q in qs)
     t = 0
     limit = 8 * (remaining + n_stages + 8)
+
+    def try_assign(r: int, qi: int, cap: Dict[str, int], t: int,
+                   w_pass: bool) -> bool:
+        q = orders[r][qi]
+        if q.parity is not None and not fb_per_tick and t % 2 != q.parity:
+            return False
+        i = ptrs[r][qi]
+        if i >= len(q.ops):
+            return False
+        kind, micro, stage = q.ops[i]
+        if fb_per_tick and (kind == "W") != w_pass:
+            return False
+        ck = kind if fb_per_tick else "all"
+        if cap[ck] <= 0:
+            return False
+        dep: Optional[Tuple[str, int, int]] = None
+        same_tick_ok = False
+        if kind == "F" and stage > 0:
+            dep = ("F", micro, stage - 1)
+        elif kind == "W":
+            dep = ("B", micro, stage)
+        elif kind == "B":
+            if stage == n_stages - 1:
+                dep = ("F", micro, stage)
+                same_tick_ok = fb_per_tick
+            else:
+                dep = ("B", micro, stage + 1)
+        if dep is not None:
+            td = assigned.get(dep)
+            if td is None or not (td < t or (same_tick_ok and td <= t)):
+                return False
+        assigned[(kind, micro, stage)] = t
+        ptrs[r][qi] += 1
+        cap[ck] -= 1
+        return True
+
     while remaining:
         if t > limit:
             raise RuntimeError("schedule deadlocked (invalid op order)")
@@ -260,38 +304,21 @@ def assign_ticks(orders: List[List[_Queue]], n_stages: int, *,
             progress = True
             while progress:
                 progress = False
-                for qi, q in enumerate(queues):
-                    if q.parity is not None and t % 2 != q.parity:
-                        continue
-                    i = ptrs[r][qi]
-                    if i >= len(q.ops):
-                        continue
-                    kind, micro, stage = q.ops[i]
-                    ck = kind if fb_per_tick else "all"
-                    if cap[ck] <= 0:
-                        continue
-                    dep: Optional[Tuple[str, int, int]] = None
-                    same_tick_ok = False
-                    if kind == "F" and stage > 0:
-                        dep = ("F", micro, stage - 1)
-                    elif kind == "W":
-                        dep = ("B", micro, stage)
-                    elif kind == "B":
-                        if stage == n_stages - 1:
-                            dep = ("F", micro, stage)
-                            same_tick_ok = fb_per_tick
-                        else:
-                            dep = ("B", micro, stage + 1)
-                    if dep is not None:
-                        td = assigned.get(dep)
-                        if td is None or not (td < t or (same_tick_ok
-                                                         and td <= t)):
-                            continue
-                    assigned[(kind, micro, stage)] = t
-                    ptrs[r][qi] += 1
-                    cap[ck] -= 1
-                    remaining -= 1
-                    progress = True
+                for qi in range(len(queues)):
+                    if try_assign(r, qi, cap, t, w_pass=False):
+                        remaining -= 1
+                        progress = True
+            if fb_per_tick and cap["F"] == 1 and cap["B"] == 1:
+                # F/B queues are drained-or-blocked and assigned nothing
+                # this tick: the rank-tick is idle, so a W op may fill it
+                # (a W never shares a tick with the rank's own F or B; the
+                # F/B pass cannot re-enable afterwards — every cross-op
+                # dependency is strict-previous-tick except the last
+                # stage's F->B hand-off, which needs the F this pass
+                # did not assign).
+                for qi in range(len(queues)):
+                    if try_assign(r, qi, cap, t, w_pass=True):
+                        remaining -= 1
         t += 1
     return assigned
 
@@ -448,7 +475,29 @@ def make_schedule(name: str, pp: int, n_micro: int,
 def exec_tick_times(sched: PipelineSchedule
                     ) -> Dict[Tuple[str, int, int], int]:
     """Executor-timeline tick of every op (one F and one B per rank per
-    tick): the timing ``train.schedules.build_exec_tables`` compiles into
-    the shard_map executor's static tables."""
+    tick; under zb1p, W ops on dedicated F/B-free ticks): the timing
+    ``train.schedules.build_exec_tables`` compiles into the shard_map
+    executor's static tables."""
     orders = _orders(sched.name, sched.pp, sched.n_micro, sched.n_chunks)
     return assign_ticks(orders, sched.n_stages, fb_per_tick=True)
+
+
+@functools.lru_cache(maxsize=512)
+def zb_pending_peak(pp: int, n_micro: int) -> Tuple[int, ...]:
+    """Per-rank peak count of zb1p microbatches sitting between their B
+    tick and their W tick on the executor timeline — the depth of the
+    executor's pending-dW stash ring, and therefore what the memory model
+    must price for ``schedule="zb1p"`` (one fp32 copy of the rank's
+    per-layer grads per pending microbatch; see ``train.pipeline_loop``).
+    jax-free: derived from ``exec_tick_times`` like every other executor
+    bound."""
+    sched = make_schedule("zb1p", pp, n_micro)
+    times = exec_tick_times(sched)
+    out = []
+    for r in range(pp):
+        T = max(times.values()) + 1
+        load = np.zeros(T + 1, np.int64)
+        for m in range(n_micro):
+            load[times[("B", m, r)]:times[("W", m, r)]] += 1
+        out.append(int(load.max()) if n_micro else 0)
+    return tuple(out)

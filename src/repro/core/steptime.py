@@ -16,17 +16,34 @@ schedule literature quotes: with ``t_f = t_b = t_w``, 1f1b's bubble is
 schedules exist.
 
 **Executor model** (:func:`predict_step_time`): what
-``train.pipeline_loop``'s masked SPMD executor will actually measure.  That
-executor burns one full (masked) chunk forward + one full (masked) chunk
-vjp every tick on every rank regardless of the activity masks, so its wall
-clock is ``T_exec × per-tick cost`` — schedules differ through their
-executor tick count (``exec_tick_times``), their chunk depth (interleaved
-halves layers per tick), their ring count (dualpipe permutes both
-directions) and, for zb1p, the pending-gradient flush traffic.  On this
-executor zb1p costs ``T_exec(1f1b) + 1`` ticks plus the flush — it cannot
-*win* here; its bubble elimination pays off on hardware that skips masked
-work.  The benchmark harness (``benchmarks/step_bench.py``) gates measured
-rankings against THIS model, not the ideal one.
+``train.pipeline_loop``'s SPMD executor will actually measure.  Two
+executor views, selected by ``view=``:
+
+* ``"overlapped"`` (the default — the overlap engine): each tick costs
+  only the work its cond-gated branches actually run, so per tick the
+  model takes the *slowest rank's* active compute and overlaps the
+  boundary-ring traffic against it — wall clock
+  ``Σ_t max(max_r compute(t, r), comm) + T × overhead``.  Per-activity
+  compute weights (in chunk-forward units, :func:`exec_tick_activity`):
+  F = 1; the fused recompute backward (1f1b/interleaved/dualpipe, slot
+  checkpointing on) = 4 (replay + dx + dW); zb1p's B runs the full vjp
+  *without* slot checkpointing (no replay — it stashes the fp32
+  pending-dW instead of recomputing activations) = 3, and its W is a
+  pure stash→accumulator flush ≈ 0.25.  That asymmetry — 1f1b pays the
+  recompute inside every fused backward while zb1p skips it entirely at
+  the price of the grad stash — is exactly the zero-bubble trade, and
+  it is why zb1p's measured step can now dip *below* 1f1b's despite its
+  longer tick table.  (On a serializing CPU host the saving holds only
+  while the chunk's saved intermediates fit the core's cache — the
+  ``cache_bytes`` cliff in :func:`predict_step_time`.)
+* ``"masked"`` (the legacy pre-overlap executor): one full masked chunk
+  forward + one full masked chunk vjp per rank per tick regardless of
+  activity — wall clock ``T_exec × per-tick cost``.  Kept as the
+  reference cost model the overlap engine is measured against
+  (``docs/perf-trajectory.md`` tracks the measured/ideal convergence).
+
+The benchmark harness (``benchmarks/step_bench.py``) gates measured
+rankings against the overlapped view, not the ideal one.
 
 Also here: the analytic FLOPs the harness converts wall clock into MFU with
 (:func:`model_fwd_flops` / :func:`step_flops` / :func:`mfu`), counting
@@ -197,39 +214,78 @@ def bubble_fraction(schedule: str, pp: int, n_micro: int,
 
 
 # ---------------------------------------------------------------------------
-# Executor model: what the masked SPMD tick loop will measure
+# Executor model: what the SPMD tick loop will measure
 # ---------------------------------------------------------------------------
+
+# Per-activity compute weights in chunk-forward units.  The fused
+# chunk-recompute backward (slot checkpointing on) replays the forward and
+# runs both gradient halves: 1 + 1 + 2 = 4F.  zb1p's B runs the same vjp
+# *without* slot checkpointing — no replay, because instead of recomputing
+# activations at W-time it stashes the fp32 pending-dW at B-time — so
+# B ≈ 3F (dx + dW, replay skipped), and W is a pure stash→accumulator
+# flush ≈ 0.25F.  Together ~3.25F against the fused 4F: zb1p does strictly
+# less compute per microbatch *and* fills its cooldown with the cheap W
+# flushes (the ZB trade, paid for in stash memory).
+_W_F = 1.0
+_W_B_FUSED = 4.0
+_W_B_SPLIT = 3.0
+_W_W = 0.25
+
 
 @functools.lru_cache(maxsize=1024)
 def exec_ticks(schedule: str, pp: int, n_micro: int,
                n_chunks: int = 1) -> int:
-    """Tick count of the executor timeline (one masked F + one masked B —
-    and, zb1p, one masked W flush — per rank per tick)."""
+    """Tick count of the executor timeline (one cond-gated F + one
+    cond-gated B — and, zb1p, dedicated cond-gated W ticks — per rank)."""
     sched = make_schedule(schedule, pp, n_micro, n_chunks=n_chunks)
     return max(exec_tick_times(sched).values()) + 1
 
 
+@functools.lru_cache(maxsize=1024)
+def exec_tick_activity(schedule: str, pp: int, n_micro: int,
+                       n_chunks: int = 1, w_b_split: float = _W_B_SPLIT
+                       ) -> Tuple[Tuple[float, ...], ...]:
+    """(T, pp) per-tick per-rank compute weight of the executor timeline,
+    in chunk-forward units (F = 1, fused B = 4, zb1p's split B = 3 /
+    W = 0.25).  Zero entries are the cond-gated no-op ticks the overlap
+    engine skips; ``sum(1 for w in row if w)`` over a rank's column is its
+    active-tick count — exactly M F-ticks + M B-ticks (+ M W-ticks under
+    zb1p) per (rank, chunk).  ``w_b_split`` lets :func:`predict_step_time`
+    substitute a host-adjusted weight for zb1p's no-remat B (the cache
+    cliff, below) without disturbing the canonical table."""
+    sched = make_schedule(schedule, pp, n_micro, n_chunks=n_chunks)
+    times = exec_tick_times(sched)
+    T = max(times.values()) + 1
+    split = schedule == "zb1p"
+    w = {"F": _W_F, "B": w_b_split if split else _W_B_FUSED, "W": _W_W}
+    act = [[0.0] * pp for _ in range(T)]
+    for (op, m, g), t in times.items():
+        r, _ = sched.owner(g, m)
+        act[t][r] += w[op]
+    return tuple(tuple(row) for row in act)
+
+
 @dataclasses.dataclass(frozen=True)
 class StepTimePrediction:
-    """Executor-model step time, decomposed per tick.  ``total_s`` =
-    ``ticks × (compute + comm + flush + overhead)``."""
+    """Executor-model step time.  ``total_s = compute_s + comm_s +
+    overhead_s``; ``ticks_active`` counts the (tick, rank) cells with any
+    gated work (``ticks × pp`` minus the cond-skipped no-ops)."""
 
     schedule: str
     pp: int
     n_micro: int
     n_chunks: int
+    view: str                       # 'overlapped' | 'masked'
     ticks: int
-    compute_s_per_tick: float
-    comm_s_per_tick: float
-    flush_s_per_tick: float         # zb1p pending-gradient traffic; else 0
-    overhead_s_per_tick: float
+    ticks_active: int
+    compute_s: float                # critical-rank compute, summed over ticks
+    comm_s: float                   # exposed (overlapped) / serial (masked)
+    overhead_s: float               # ticks × tick_overhead_s
     ideal_bubble_fraction: float    # the bubble_stats view, for the record
 
     @property
     def total_s(self) -> float:
-        return self.ticks * (self.compute_s_per_tick + self.comm_s_per_tick
-                             + self.flush_s_per_tick
-                             + self.overhead_s_per_tick)
+        return self.compute_s + self.comm_s + self.overhead_s
 
 
 def predict_step_time(spec: ModelSpec, schedule: str, pp: int,
@@ -237,42 +293,90 @@ def predict_step_time(spec: ModelSpec, schedule: str, pp: int,
                       n_chunks: int = 1, tp: int = 1, sp: bool = False,
                       flops_per_s: float = NOMINAL_FLOPS_PER_S,
                       bytes_per_s: float = NOMINAL_BYTES_PER_S,
-                      tick_overhead_s: float = 0.0) -> StepTimePrediction:
+                      tick_overhead_s: float = 0.0,
+                      serialize_ranks: bool = False,
+                      cache_bytes: float = 0.0,
+                      view: str = "overlapped") -> StepTimePrediction:
     """Predict what ``make_pipeline_train_step`` will measure for this
     (schedule, pp, tp, sp) on hardware with the given matmul throughput and
     memory/interconnect bandwidth.
 
-    Per tick the executor runs one full chunk forward and one full chunk
-    vjp (forward replay + 2× backward ≈ 3× forward) over the rank's
-    ``l_max``-layer union slots *plus* the always-on embed/head/CE, TP
-    dividing the matmul work; boundary ``ppermute`` payloads are
-    ``b·s[/tp under sp]·h`` bf16, two rings for the down/up pair every
-    schedule uses and four for dualpipe; zb1p adds the pending-stash
-    read-modify-write (4× the chunk's fp32 grad bytes) every tick.  Only
-    *rankings* across schedules at fixed everything-else are load-bearing
-    (CI's direction gate); absolute times need calibrated constants."""
+    ``view="overlapped"`` (default) models the cond-gated overlap engine:
+    per tick, the slowest rank's *active* compute (weights from
+    :func:`exec_tick_activity`) with the boundary-ring traffic overlapped
+    against it — a tick costs ``max(compute, comm)`` and idle ticks cost
+    only the tick overhead.  ``view="masked"`` is the legacy pre-overlap
+    executor: every tick burns one full chunk forward + one full
+    chunk-recompute vjp on every rank, serial with the ring traffic.
+
+    ``serialize_ranks=True`` adapts the overlapped view to a host whose
+    "devices" share cores (the CPU fake-device harness: XLA runs the
+    ranks' programs back-to-back, not concurrently): a tick then costs the
+    *sum* of the ranks' active compute, not the max — schedule
+    parallelism wins vanish and only total-work differences (zb1p's
+    skipped recompute replay) and tick-count overhead remain measurable.
+    The benchmark harness sets it from the host core count; the planner
+    keeps the parallel default (it prices real accelerators).
+
+    ``cache_bytes > 0`` (only meaningful with ``serialize_ranks``) adds
+    the serializing host's cache cliff to that view: zb1p's no-remat B is
+    only ~3F while the chunk vjp's saved intermediates stay resident in
+    the core's cache — past the cliff every saved tensor is reloaded from
+    memory at latency comparable to recomputing it, the replay saving is
+    erased, and B is priced at the fused 4F (measured on the CPU harness:
+    2-layer chunks fit a 2 MB L2 and keep the ~5% win, 4-layer chunks
+    overflow it and tie).  Real accelerators stream saved activations
+    from HBM on a compute-bound vjp, so the parallel view keeps B = 3
+    unconditionally; the harness passes the host L2 size.
+
+    Boundary ``ppermute`` payloads are ``b·s[/tp under sp]·h`` bf16, two
+    rings for the down/up pair every schedule uses and four for dualpipe.
+    Only *rankings* across schedules at fixed everything-else are
+    load-bearing (CI's direction gate); absolute times need calibrated
+    constants."""
+    if view not in ("overlapped", "masked"):
+        raise ValueError(f"unknown executor view {view!r}")
     v = norm_chunks(schedule, n_chunks)
     ticks = exec_ticks(schedule, pp, n_micro, n_chunks=v)
     G = n_model_chunks(schedule, pp, v)
     l_chunk = math.ceil(spec.n_layers / G)
+    w_b_split = _W_B_SPLIT
+    if schedule == "zb1p" and serialize_ranks and cache_bytes > 0:
+        from .activations import layer_activation_bytes
+        from .parallel_config import ParallelConfig, RecomputePolicy
+        cfg = ParallelConfig(tp=tp, sp=sp, micro_batch=micro_batch,
+                             seq_len=seq_len,
+                             recompute=RecomputePolicy.NONE)
+        per_layer = sum(
+            layer_activation_bytes(spec, cfg, l).per_layer
+            for l in range(spec.n_layers)) / spec.n_layers
+        if l_chunk * per_layer > cache_bytes:
+            w_b_split = _W_B_FUSED     # past the cliff: saving erased
+    acts = exec_tick_activity(schedule, pp, n_micro, n_chunks=v,
+                              w_b_split=w_b_split)
+    ticks_active = sum(1 for row in acts for w in row if w > 0)
     tokens = micro_batch * seq_len
     layers_fwd = sum(layer_fwd_flops(spec, l, tokens, seq_len)
                      for l in range(spec.n_layers)) / spec.n_layers
     head_fwd = 2.0 * tokens * spec.h * spec.vocab
-    chunk_fwd = l_chunk * layers_fwd + head_fwd
-    compute = 4.0 * chunk_fwd / tp / flops_per_s
+    chunk_fwd = (l_chunk * layers_fwd + head_fwd) / tp / flops_per_s
     rings = 4 if schedule == "dualpipe" else 2
     payload = micro_batch * (seq_len // tp if sp else seq_len) * spec.h * 2
-    comm = rings * payload / bytes_per_s
-    flush = 0.0
-    if schedule == "zb1p":
-        chunk_params = sum(spec.layer_params(l)
-                           for l in range(spec.n_layers)) \
-            / spec.n_layers * l_chunk
-        flush = 4.0 * (chunk_params * 4 / tp) / bytes_per_s
+    comm_tick = rings * payload / bytes_per_s
+    if view == "overlapped":
+        compute_s = 0.0
+        comm_s = 0.0                # only the part compute cannot hide
+        for row in acts:
+            c = (sum(row) if serialize_ranks else max(row)) * chunk_fwd
+            compute_s += c
+            comm_s += max(0.0, comm_tick - c)
+    else:
+        compute_s = ticks * (_W_F + _W_B_FUSED) * chunk_fwd
+        comm_s = ticks * comm_tick
     ideal = bubble_fraction(schedule, pp, n_micro, v)
     return StepTimePrediction(
-        schedule=schedule, pp=pp, n_micro=n_micro, n_chunks=v, ticks=ticks,
-        compute_s_per_tick=compute, comm_s_per_tick=comm,
-        flush_s_per_tick=flush, overhead_s_per_tick=tick_overhead_s,
+        schedule=schedule, pp=pp, n_micro=n_micro, n_chunks=v, view=view,
+        ticks=ticks, ticks_active=ticks_active,
+        compute_s=compute_s, comm_s=comm_s,
+        overhead_s=ticks * tick_overhead_s,
         ideal_bubble_fraction=ideal)

@@ -275,6 +275,18 @@ def _moe_forward_ep(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
     recv_eid = jax.lax.all_to_all(send_eid, ep_axis, split_axis=0,
                                   concat_axis=0, tiled=False)
 
+    # Dual-stream shape: the shared expert depends only on the residual,
+    # not on the a2a payloads, so it is computed *between* the dispatch
+    # a2a's issue and its first consumer — XLA's scheduler is free to run
+    # the ETP matmuls while the token exchange is in flight (the DualPipe
+    # overlap structure at slot granularity).
+    ys = None
+    if e.n_shared:
+        xs = tp_f(xt_full) if tp_f is not None else xt_full
+        ys = mlp_apply(p["shared"], spec, xs)
+        if tp_g is not None:
+            ys = tp_g(ys)
+
     # local grouped FFN over the (E/ep, C, h) buffer; C = the global
     # per-expert capacity (tk·ep assignments over E experts), NOT scaled
     # by capacity_factor a second time
@@ -303,11 +315,9 @@ def _moe_forward_ep(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
     if sp_axis is None:
         y = unshard_tokens_ep(y, ep_axis, 0)       # rejoin replicated stream
 
-    if e.n_shared:
+    if ys is not None:
         # shared experts process every token and stay on the ETP path
-        xs = tp_f(xt_full) if tp_f is not None else xt_full
-        ys = mlp_apply(p["shared"], spec, xs)
-        y = y + (tp_g(ys) if tp_g is not None else ys)
+        y = y + ys
     # probs are the rank's token chunk only (documented: per-shard under EP)
     return MoEOutput(y=y.reshape(b, s, h), aux_loss=aux, router_probs=probs)
 

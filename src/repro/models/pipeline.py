@@ -486,14 +486,22 @@ def pipeline_stage_apply(layers_p: PyTree, spec: ModelSpec,
                          positions: jnp.ndarray, mask: jnp.ndarray,
                          moe_flag: jnp.ndarray,
                          tp_axis: Optional[str] = None,
-                         sp: bool = False, ep: int = 1
+                         sp: bool = False, ep: int = 1,
+                         remat: bool = True
                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Scan this stage's l_max union slots.  ``layers_p`` leaves are
     (l_max, ...); ``mask``/``moe_flag`` are (l_max,).  With ``tp_axis`` the
     slots run manual TP; with ``sp`` additionally Megatron sequence
     parallelism — ``x`` is then the seq-sharded residual; with ``ep`` the
     MoE slots dispatch expert-parallel over the same axis (see
-    ``_slot_apply``)."""
+    ``_slot_apply``).
+
+    ``remat=False`` bypasses ``opts.recompute`` for this call: a vjp through
+    the stage then stores the slot internals instead of recomputing them —
+    the zb1p executor's B tick uses this (it runs the full vjp once, with
+    no recompute replay, and parks the weight grads in the fp32 pending-dW
+    stash for the deferred W flush; the replay it skips is exactly the
+    compute zero-bubble trades stash memory for)."""
 
     def body(carry, inp):
         xc, aux = carry
@@ -502,7 +510,8 @@ def pipeline_stage_apply(layers_p: PyTree, spec: ModelSpec,
                             sp, ep)
         return (xc, aux + a), None
 
-    body = _remat(body, opts.recompute)
+    if remat:
+        body = _remat(body, opts.recompute)
     (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
                                (layers_p, mask, moe_flag))
     return x, aux

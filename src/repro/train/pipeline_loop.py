@@ -5,11 +5,10 @@ builds one jit-able step that runs any of the four schedules in
 ``train.schedules`` / ``core.schedules`` — plain ``1f1b`` (the default,
 PR 1's GPipe-fill + 1F1B steady state), Megatron-style ``interleaved``
 virtual stages, the ``dualpipe`` bidirectional schedule, or the ``zb1p``
-zero-bubble schedule (ZB-H1: the B tick stashes the layer gradients in a
-per-rank pending fp32 buffer and the schedule's W ticks fold the stash
-into the accumulator — deferred weight-gradient work; shared embed/head/
-final-norm grads accumulate at B, outside the W bookkeeping) — over the
-``pipe`` mesh axis.  Arguments:
+zero-bubble schedule (ZB-H1: the backward runs once at B, the per-layer
+weight grads park in an fp32 pending stash and are applied on a dedicated
+W tick — see the overlap-engine notes below) — over the ``pipe`` mesh
+axis.  Arguments:
 
 * ``model``: a ``models.build_model`` Model (decoder-only dense/MoE
   families; see ``models.pipeline.check_pipeline_supported``),
@@ -33,8 +32,41 @@ identity is ``lax.axis_index('pipe')``.  What happens at tick t — forward
 or backward of which microbatch on which local chunk, and where boundary
 tensors travel — is read from the schedule's static tables
 (``train.schedules.build_exec_tables``), which re-time the canonical tick
-stream under the executor's one-(masked)-forward + one-(masked)-backward
-per tick capacity.  Boundary activations and activation-gradients move via
+stream under the executor's one-forward + one-backward (+ one W, for
+schedules that split the backward) per tick capacity.
+
+The tick body is an *overlap engine*, not a masked replay:
+
+* **cond-gated compute** — each of the tick's F / B / W programs runs
+  under ``lax.cond`` on its activity table, so a rank whose table row is
+  idle (warmup, cooldown, drained) executes a no-op branch that just
+  threads the carried buffers through: idle ticks cost ~0 instead of a
+  full masked forward+backward.  The gate predicate depends only on the
+  'pipe' rank, so it is uniform across 'data'/'model' and the collectives
+  *inside* the branches (data psums, TP/SP operators, EP all-to-all)
+  remain deadlock-free; the 'pipe' ppermutes — whose peers have
+  *different* predicates — stay outside the conds.
+* **true W-only ticks** — for ``zb1p`` the backward is the ZB-H1 split:
+  B runs the fused chunk vjp once *without* slot checkpointing (the split
+  stashes grads instead of recomputing activations, so the replay the
+  checkpoint policy would pay is gone), retires dx and the shared
+  embed/head/norm grads, and writes the per-layer fp32 pending-dW into a
+  scan-carried stash slot (``b_sidx``); the dedicated W tick is a pure
+  stash → accumulator flush (``w_sidx``) — cooldown fills with cheap W
+  work exactly as ZB-H1 intends.  The stash ring depth is the interval
+  colouring of the B→W pendency, whose peak
+  ``core.schedules.zb_pending_peak`` the memory model prices.
+* **async boundary comms** — each tick issues its forward-boundary
+  ppermutes right after F and consumes them only after B/W (the transfer
+  overlaps the backward), and the input-gradient computed by B rides the
+  scan carry so its ppermute is issued at the *top of the next tick*,
+  overlapping that tick's forward (the grad-receive tables are shifted
+  one tick to match).  Inside the MoE chunk the EP all-to-all is likewise
+  issued before — and consumed after — the shared expert's independent
+  compute (``models.moe._moe_forward_ep``), the DualPipe dual-stream
+  shape.
+
+Boundary activations and activation-gradients move via
 ``lax.ppermute`` down-ring and (for dualpipe's reverse direction and
 interleaved's virtual-stage wraparound) up-ring, landing in per-chunk slot
 rings whose statically-coloured size is the executor's true in-flight bound
@@ -100,7 +132,7 @@ Semantics match ``train.loop.make_train_step``: fp32 gradient accumulation
 across microbatches, mean over n_micro, one AdamW update, loss metric
 ce + 0.01·aux per microbatch.  ``TrainState`` keeps the pp=1 layout — grads
 are unstacked back before the update — so optimizer, checkpointing and the
-pp=1 path are untouched.  All three schedules reproduce the pp=1 step's
+pp=1 path are untouched.  All four schedules reproduce the pp=1 step's
 loss and post-update params to bf16-accumulation tolerance at
 pp∈{2,4} × tp∈{1,2} × dp∈{1,2} (``tests/test_pipeline_1f1b.py``,
 ``tests/test_pipeline_3d.py``).
@@ -134,6 +166,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.notation import AttentionKind
@@ -195,7 +228,8 @@ def _dyn(a: jnp.ndarray, i: jnp.ndarray) -> jnp.ndarray:
 def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
                              schedule: str = "1f1b", n_chunks: int = 1,
                              zero: ZeROStage = ZeROStage.NONE,
-                             sp: bool = False, ep: int = 1):
+                             sp: bool = False, ep: int = 1,
+                             gate_compute: bool = True):
     """Build the jit-able schedule-driven pipeline step for ``mesh`` (axes
     ('pipe'[, 'data'][, 'model'])); pp = mesh.shape['pipe'], TP degree =
     mesh.shape['model'].  Same contract as ``make_train_step``.  ``zero``
@@ -220,7 +254,16 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     divisible by ``ep``; the a2a group is the whole 'model' axis, so only
     ``ep in (1, tp)`` is executable.  Composes with any schedule, ``sp``
     and ``zero``; callers keeping state resident should use the
-    ``_EXEC_EP_RULES`` layout in ``state_shardings``."""
+    ``_EXEC_EP_RULES`` layout in ``state_shardings``.
+
+    ``gate_compute=False`` disables the ``lax.cond`` gating of the tick
+    body: every tick then runs the full active-branch program and selects
+    between it and the no-op result with ``jnp.where`` — the pre-overlap
+    masked-executor cost model with the overlap engine's numerics.  The
+    active branch's arithmetic is identical either way, so gated and
+    ungated steps agree bit-for-bit; the flag exists for exactly that A/B
+    check (``tests/test_zb_equivalence.py``) and for isolating cond-related
+    compiler issues."""
     spec, opts = model.spec, model.opts
     check_pipeline_supported(spec)
     if "pipe" not in mesh.axis_names:
@@ -249,6 +292,7 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     part = chunked_partition(spec, S, schedule=schedule,
                              n_chunks=sched.n_chunks)
     V, T, XS, GS = sched.n_chunks, tab.T, tab.x_slots, tab.g_slots
+    SS = tab.s_slots
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     gemma = spec.name.startswith("gemma")
     masks_all = jnp.asarray(part.mask)              # (S, V, l_max)
@@ -259,9 +303,22 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     tabs = {k: jnp.asarray(getattr(tab, k)) for k in (
         "f_act", "f_micro", "f_chunk", "f_xidx",
         "b_act", "b_micro", "b_chunk", "b_xidx", "b_gidx",
-        "rfd_act", "rfd_idx", "rfu_act", "rfu_idx",
-        "rgd_act", "rgd_idx", "rgu_act", "rgu_idx")
-        + (("w_act", "w_chunk") if zb else ())}
+        "rfd_act", "rfd_idx", "rfu_act", "rfu_idx")
+        + (("w_act", "w_micro", "w_chunk", "b_sidx", "w_sidx")
+           if zb else ())}
+    # Grad arrivals are consumed one tick late: the input-gradient computed
+    # at tick t rides the scan carry, its ppermute is issued at the TOP of
+    # tick t+1 (so the ring transfer overlaps t+1's forward compute) and the
+    # payload lands in the grad ring just before t+1's backward reads it.
+    # The receive tables shift down one tick to match; visibility is
+    # unchanged — a strict-previous-tick dependency means the earliest
+    # consumer runs at t+1, which now reads the payload the moment it lands,
+    # and slot-reuse stays safe (the write lands strictly after the previous
+    # occupant's last read at tick <= t, exactly as the end-of-tick write
+    # scheme guaranteed).
+    _shift = lambda a: np.concatenate([np.zeros_like(a[:1]), a[:-1]], axis=0)
+    for k in ("rgd_act", "rgd_idx", "rgu_act", "rgu_idx"):
+        tabs[k] = jnp.asarray(_shift(getattr(tab, k)))
     # gate every permute on its own table: 1f1b/interleaved move forwards
     # down-ring and gradients up-ring only — permuting the unused payload
     # would double boundary traffic per tick
@@ -289,7 +346,7 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
         p_layers = p["layers"]
         p_shared = {k: v for k, v in p.items() if k != "layers"}
 
-        def chunk_fn(pl, ps, x_recv, tok, mm, c):
+        def chunk_fn(pl, ps, x_recv, tok, mm, c, remat=True):
             """Uniform per-chunk program: embed (selected when the chunk is
             the first model chunk), the chunk's union slots, head + local CE
             sum (meaningful on the last model chunk, zero-cotangent
@@ -297,7 +354,10 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             logits column-sharded on 'model' (vocab-parallel CE); under SP
             the residual in and out of the slots — and the returned ``y`` —
             is the (b, s/tp, h) seq shard, and the head gathers the
-            final-norm output before the column-sharded projection."""
+            final-norm output before the column-sharded projection.
+            ``remat=False`` (zb1p's split backward) bypasses the slot
+            checkpointing so each half of the B/W split replays the chunk
+            exactly once."""
             if tp_axis:
                 x0 = embed_tp(ps["embed"]["w"], tok, axis=tp_axis,
                               scale_by_dim=gemma, h=spec.h, sp=sp)
@@ -308,7 +368,7 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             positions = jnp.broadcast_to(jnp.arange(s)[None], (b_loc, s))
             y, aux = pipeline_stage_apply(pl, spec_run, opts, x, positions,
                                           smask[c], sflag[c], tp_axis,
-                                          sp=sp, ep=ep)
+                                          sp=sp, ep=ep, remat=remat)
             z = rmsnorm(ps["final_norm"], y, spec.norm_eps, gemma_style=gemma)
             w_out = ps["embed"]["w"].T if spec.tie_embeddings \
                 else ps["head"]["w"]
@@ -331,108 +391,183 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
         def layers_at(c):
             return jax.tree.map(lambda a: _dyn(a, c), p_layers)
 
+        def _cond(pred, on_fn, off_fn):
+            """The overlap engine's gate: run ``on_fn`` only when the tick
+            table says so (idle/warmup/cooldown ticks cost ~0 — the no-op
+            branch just threads the carried buffers through unchanged, so
+            both branches return identical pytree shapes and XLA aliases
+            the buffers).  With ``gate_compute=False`` both branches run
+            and ``jnp.where`` selects — the pre-overlap masked cost model
+            with bit-identical active arithmetic (the A/B reference)."""
+            if gate_compute:
+                return jax.lax.cond(pred, on_fn, off_fn)
+            on_v, off_v = on_fn(), off_fn()
+            return jax.tree.map(
+                lambda a_, b_: jnp.where(pred, a_, b_), on_v, off_v)
+
+        def _cotangents(tok, mm, c, dy):
+            """Output cotangents of ``chunk_fn`` for retiring chunk ``c``:
+            the boundary grad ``dy`` (zeroed on the last model chunk, whose
+            ``y`` has no consumer), the CE mean cotangent (nonzero only on
+            the last chunk) and the 0.01 aux weight (aux is a per-data-shard
+            mean whose loss term is the pmean, so each shard carries
+            1/data_size; grads are psummed over the data axes below)."""
+            lastc = last_l[c]
+            dy_cot = jnp.where(lastc < 0.5, dy, jnp.zeros((), dy.dtype))
+            dce = lastc / jnp.maximum(count_g(tok, mm), 1.0)
+            return dy_cot, dce, jnp.float32(0.01 / data_size)
+
         def tick(carry, t):
             if zb:
-                xbuf, gbuf, gl, gsh, loss, aux_acc, pend = carry
+                xbuf, gbuf, gl, gsh, loss, aux_acc, dx_c, stash = carry
             else:
-                xbuf, gbuf, gl, gsh, loss, aux_acc = carry
+                xbuf, gbuf, gl, gsh, loss, aux_acc, dx_c = carry
+            ring_dn = [(i, (i + 1) % S) for i in range(S)]
+            ring_up = [(i, (i - 1) % S) for i in range(S)]
 
-            # -- forward: the schedule's (micro, chunk) for this tick ------
-            fa = tabs["f_act"][t, d]
-            fm = tabs["f_micro"][t, d]
-            fc = tabs["f_chunk"][t, d]
-            x_in = _dyn(xbuf, tabs["f_xidx"][t, d])
-            tok_f = micro_at(toks, fm)
-            mm_f = None if mmask is None else micro_at(mmask, fm)
-            y, ce_sum, aux_f = chunk_fn(layers_at(fc), p_shared, x_in,
-                                        tok_f, mm_f, fc)
-            ce_m = _psum(ce_sum, data_axes) / jnp.maximum(
-                count_g(tok_f, mm_f), 1.0)
-            loss = loss + fa * last_l[fc] * ce_m
-            aux_acc = aux_acc + fa * aux_f
-
-            # -- backward: retire (micro, chunk) via chunk-recompute vjp ---
-            ba = tabs["b_act"][t, d]
-            bm = tabs["b_micro"][t, d]
-            bc = tabs["b_chunk"][t, d]
-            tok_b = micro_at(toks, bm)
-            mm_b = None if mmask is None else micro_at(mmask, bm)
-            x_sv = _dyn(xbuf, tabs["b_xidx"][t, d])
-            dy = _dyn(gbuf, tabs["b_gidx"][t, d])
-            pl_b = layers_at(bc)
-            _, vjp_fn = jax.vjp(
-                lambda pl_, ps_, x_: chunk_fn(pl_, ps_, x_, tok_b, mm_b, bc),
-                pl_b, p_shared, x_sv)
-            lastb = last_l[bc]
-            dy_cot = jnp.where((ba > 0.5) & (lastb < 0.5), dy,
-                               jnp.zeros((), dy.dtype))
-            dce = ba * lastb / jnp.maximum(count_g(tok_b, mm_b), 1.0)
-            # aux is a per-data-shard token mean; the loss term is its pmean,
-            # so each shard's cotangent carries 1/data_size (the grads are
-            # psummed over the data axes below)
-            daux = 0.01 * ba / data_size
-            dpl, dps, dx = vjp_fn((dy_cot, dce, daux))
-            if zb:
-                # zb1p: B computes the layer grads but *stashes* them in the
-                # pending buffer; the schedule's W op (below) folds the stash
-                # into the accumulator — deferred weight-gradient work, the
-                # executor's rendering of ZB's B/W split.  Shared (embed/
-                # head/final-norm) grads accumulate at B as before: they sit
-                # outside the per-chunk W bookkeeping.
-                cur = jax.tree.map(lambda a: _dyn(a, bc), pend)
-                upd = jax.tree.map(lambda a, g_: a + g_.astype(jnp.float32),
-                                   cur, dpl)
-                pend = jax.tree.map(
-                    lambda a, u: jax.lax.dynamic_update_index_in_dim(
-                        a, u, bc, 0),
-                    pend, upd)
-                wa = tabs["w_act"][t, d]
-                wc = tabs["w_chunk"][t, d]
-                pc = jax.tree.map(lambda a: _dyn(a, wc), pend)
-                gc = jax.tree.map(lambda a: _dyn(a, wc), gl)
-                gl = jax.tree.map(
-                    lambda a, g_, p_: jax.lax.dynamic_update_index_in_dim(
-                        a, g_ + wa * p_, wc, 0),
-                    gl, gc, pc)
-                pend = jax.tree.map(
-                    lambda a, p_: jax.lax.dynamic_update_index_in_dim(
-                        a, (1.0 - wa) * p_, wc, 0),
-                    pend, pc)
-            else:
-                cur = jax.tree.map(lambda a: _dyn(a, bc), gl)
-                upd = jax.tree.map(lambda a, g_: a + g_.astype(jnp.float32),
-                                   cur, dpl)
-                gl = jax.tree.map(
-                    lambda a, u: jax.lax.dynamic_update_index_in_dim(
-                        a, u, bc, 0),
-                    gl, upd)
-            gsh = jax.tree.map(lambda a, g_: a + g_.astype(jnp.float32),
-                               gsh, dps)
-
-            # -- boundary exchange (down-ring; up-ring when the schedule
-            #    routes the reverse direction or a virtual-stage wrap) -----
             def write(buf, act, idx, payload):
                 i = idx[t, d]
                 cur_v = _dyn(buf, i)
                 val = jnp.where(act[t, d] > 0.5, payload, cur_v)
                 return jax.lax.dynamic_update_index_in_dim(buf, val, i, 0)
 
-            ring_dn = [(i, (i + 1) % S) for i in range(S)]
-            ring_up = [(i, (i - 1) % S) for i in range(S)]
+            # -- issue: the PREVIOUS tick's input-gradient permutes.  The
+            #    payload rode the scan carry, so the ring transfer is in
+            #    flight while this tick's forward computes (ppermute stays
+            #    outside the conds: it is a collective over 'pipe', where
+            #    the gate predicates differ) -----------------------------
+            if use_b_down:
+                dx_dn = jax.lax.ppermute(dx_c, "pipe", ring_dn)
+            if use_b_up:
+                dx_up = jax.lax.ppermute(dx_c, "pipe", ring_up)
+
+            # -- forward (cond-gated): the schedule's (micro, chunk) ------
+            fm = tabs["f_micro"][t, d]
+            fc = tabs["f_chunk"][t, d]
+
+            def f_on():
+                x_in = _dyn(xbuf, tabs["f_xidx"][t, d])
+                tok_f = micro_at(toks, fm)
+                mm_f = None if mmask is None else micro_at(mmask, fm)
+                y_, ce_sum, aux_f = chunk_fn(layers_at(fc), p_shared, x_in,
+                                             tok_f, mm_f, fc)
+                ce_m = _psum(ce_sum, data_axes) / jnp.maximum(
+                    count_g(tok_f, mm_f), 1.0)
+                return y_, loss + last_l[fc] * ce_m, aux_acc + aux_f
+
+            def f_off():
+                return jnp.zeros((b_loc, s_loc, h), adt), loss, aux_acc
+
+            y, loss, aux_acc = _cond(tabs["f_act"][t, d] > 0.5, f_on, f_off)
+
+            # -- issue: this tick's forward-boundary permutes (consumed
+            #    after the backward below — the transfer overlaps B/W) ----
             if use_f_down:
                 y_dn = jax.lax.ppermute(y, "pipe", ring_dn)
-                xbuf = write(xbuf, tabs["rfd_act"], tabs["rfd_idx"], y_dn)
-            if use_b_down:
-                dx_dn = jax.lax.ppermute(dx, "pipe", ring_dn)
-                gbuf = write(gbuf, tabs["rgd_act"], tabs["rgd_idx"], dx_dn)
             if use_f_up:
                 y_up = jax.lax.ppermute(y, "pipe", ring_up)
-                xbuf = write(xbuf, tabs["rfu_act"], tabs["rfu_idx"], y_up)
+
+            # -- consume: the grad payloads issued at the top of the tick
+            #    land in the ring just before the backward reads them -----
+            if use_b_down:
+                gbuf = write(gbuf, tabs["rgd_act"], tabs["rgd_idx"], dx_dn)
             if use_b_up:
-                dx_up = jax.lax.ppermute(dx, "pipe", ring_up)
                 gbuf = write(gbuf, tabs["rgu_act"], tabs["rgu_idx"], dx_up)
-            out = (xbuf, gbuf, gl, gsh, loss, aux_acc)
-            return out + ((pend,) if zb else ()), None
+
+            # -- backward (cond-gated): retire (micro, chunk) -------------
+            bm = tabs["b_micro"][t, d]
+            bc = tabs["b_chunk"][t, d]
+
+            if zb:
+                # zb1p's ZB-H1 split: B runs the fused chunk vjp ONCE,
+                # without slot checkpointing — the split stashes the fp32
+                # pending-dW instead of recomputing activations, so the
+                # replay the checkpoint policy would pay is gone (the
+                # memory-for-time trade estimate_memory prices via
+                # zb_pending_peak).  dx and the shared embed/head/norm
+                # grads retire here; the per-layer dW parks in its stash
+                # slot until the schedule's dedicated W tick below.
+                def b_on():
+                    tok_b = micro_at(toks, bm)
+                    mm_b = None if mmask is None else micro_at(mmask, bm)
+                    x_sv = _dyn(xbuf, tabs["b_xidx"][t, d])
+                    dy = _dyn(gbuf, tabs["b_gidx"][t, d])
+                    pl_b = layers_at(bc)
+                    _, vjp_fn = jax.vjp(
+                        lambda pl_, ps_, x_: chunk_fn(pl_, ps_, x_, tok_b,
+                                                      mm_b, bc, remat=False),
+                        pl_b, p_shared, x_sv)
+                    dpl, dps, dx_ = vjp_fn(_cotangents(tok_b, mm_b, bc, dy))
+                    pend = jax.tree.map(
+                        lambda g_: g_.astype(jnp.float32), dpl)
+                    stash_ = jax.tree.map(
+                        lambda st, g_: jax.lax.dynamic_update_index_in_dim(
+                            st, g_, tabs["b_sidx"][t, d], 0), stash, pend)
+                    gsh_ = jax.tree.map(
+                        lambda a, g_: a + g_.astype(jnp.float32), gsh, dps)
+                    return stash_, gsh_, dx_
+
+                def b_off():
+                    return stash, gsh, jnp.zeros((b_loc, s_loc, h), adt)
+
+                stash, gsh, dx = _cond(tabs["b_act"][t, d] > 0.5, b_on,
+                                       b_off)
+
+                # -- weight-grad tick (cond-gated): the deferred half is a
+                #    pure stash -> accumulator flush, so cooldown fills
+                #    with cheap W work exactly as ZB-H1 intends (fp32 adds
+                #    in microbatch order — the same reduction order as the
+                #    fused path, just later) ------------------------------
+                wc = tabs["w_chunk"][t, d]
+
+                def w_on():
+                    pend = jax.tree.map(
+                        lambda st: _dyn(st, tabs["w_sidx"][t, d]), stash)
+                    cur = jax.tree.map(lambda a: _dyn(a, wc), gl)
+                    upd = jax.tree.map(lambda a, g_: a + g_, cur, pend)
+                    return jax.tree.map(
+                        lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                            a, u, wc, 0), gl, upd)
+
+                def w_off():
+                    return gl
+
+                gl = _cond(tabs["w_act"][t, d] > 0.5, w_on, w_off)
+            else:
+                def b_on():
+                    tok_b = micro_at(toks, bm)
+                    mm_b = None if mmask is None else micro_at(mmask, bm)
+                    x_sv = _dyn(xbuf, tabs["b_xidx"][t, d])
+                    dy = _dyn(gbuf, tabs["b_gidx"][t, d])
+                    pl_b = layers_at(bc)
+                    _, vjp_fn = jax.vjp(
+                        lambda pl_, ps_, x_: chunk_fn(pl_, ps_, x_, tok_b,
+                                                      mm_b, bc),
+                        pl_b, p_shared, x_sv)
+                    dpl, dps, dx_ = vjp_fn(_cotangents(tok_b, mm_b, bc, dy))
+                    cur = jax.tree.map(lambda a: _dyn(a, bc), gl)
+                    upd = jax.tree.map(
+                        lambda a, g_: a + g_.astype(jnp.float32), cur, dpl)
+                    gl_ = jax.tree.map(
+                        lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                            a, u, bc, 0), gl, upd)
+                    gsh_ = jax.tree.map(
+                        lambda a, g_: a + g_.astype(jnp.float32), gsh, dps)
+                    return gl_, gsh_, dx_
+
+                def b_off():
+                    return gl, gsh, jnp.zeros((b_loc, s_loc, h), adt)
+
+                gl, gsh, dx = _cond(tabs["b_act"][t, d] > 0.5, b_on, b_off)
+
+            # -- consume: this tick's forward-boundary payloads (issued
+            #    before the backward) land in the rings ------------------
+            if use_f_down:
+                xbuf = write(xbuf, tabs["rfd_act"], tabs["rfd_idx"], y_dn)
+            if use_f_up:
+                xbuf = write(xbuf, tabs["rfu_act"], tabs["rfu_idx"], y_up)
+            out = (xbuf, gbuf, gl, gsh, loss, aux_acc, dx)
+            return (out + (stash,) if zb else out), None
 
         zeros_like_f32 = lambda tree: jax.tree.map(
             lambda a: jnp.zeros(a.shape, jnp.float32), tree)
@@ -441,11 +576,14 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
                 zeros_like_f32(p_layers),
                 zeros_like_f32(p_shared),
                 jnp.zeros((), jnp.float32),
-                jnp.zeros((), jnp.float32))
+                jnp.zeros((), jnp.float32),
+                jnp.zeros((b_loc, s_loc, h), adt))    # in-flight dx carry
         if zb:
-            # the pending-dW stash: one fp32 layer-grad copy per rank — the
-            # memory zb1p trades for its bubble (estimate_memory prices it)
-            init = init + (zeros_like_f32(p_layers),)
+            # fp32 pending-dW stash: one chunk-shaped grad pytree per
+            # stash slot, written at B, flushed at the dedicated W tick
+            init = init + (jax.tree.map(
+                lambda a: jnp.zeros((V * SS,) + a.shape[1:], jnp.float32),
+                p_layers),)
         fin, _ = jax.lax.scan(tick, init, jnp.arange(T))
         _, _, gl, gsh, loss, aux_acc = fin[:6]
 

@@ -14,9 +14,11 @@ Executor timeline vs canonical timeline
 
 Canonical ticks (``PipelineSchedule.ticks``) are one op per rank per tick —
 the unit the in-flight accounting uses.  The executor instead pairs one
-(masked) forward with one (masked) backward per tick (PR 1's structure), so
-``build_exec_tables`` re-times the same per-rank op order under that
-capacity via ``core.schedules.exec_tick_times`` and then derives:
+cond-gated forward with one cond-gated backward per tick (plus, for
+schedules that split the backward, a dedicated cond-gated W tick that never
+shares a rank-tick with the rank's own F or B), so ``build_exec_tables``
+re-times the same per-rank op order under that capacity via
+``core.schedules.exec_tick_times`` and then derives:
 
 * per-tick forward/backward tables: is the rank active, which microbatch,
   which local chunk, which buffer slot;
@@ -89,12 +91,21 @@ class ExecTables:
     rgd_idx: np.ndarray
     rgu_act: np.ndarray     # grad payload via up-ring
     rgu_idx: np.ndarray
-    # deferred weight-gradient flush (zb1p's W ops; all-zero otherwise):
-    # at tick t rank r folds its pending chunk-``w_chunk`` gradient stash
-    # into the accumulator (see train.pipeline_loop)
+    # deferred weight-gradient application (zb1p's W ops; all-zero
+    # otherwise): B runs the chunk vjp once (no slot checkpointing — the
+    # split stashes grads instead of recomputing activations) and writes
+    # the fp32 pending-dW into stash slot ``b_sidx``; at tick t rank r's W
+    # op flushes stash slot ``w_sidx`` into the grad accumulator for
+    # (``w_micro``, ``w_chunk``).  ``s_slots`` is the stash ring depth per
+    # (rank, chunk) — the interval colouring of the B→W pendency windows,
+    # whose peak is ``core.schedules.zb_pending_peak`` (what the memory
+    # model prices; see train.pipeline_loop)
     w_act: np.ndarray = None
     w_micro: np.ndarray = None
     w_chunk: np.ndarray = None
+    b_sidx: np.ndarray = None
+    w_sidx: np.ndarray = None
+    s_slots: int = 1
 
 
 def _color_intervals(intervals: List[Tuple[int, int, int]]) -> Dict[int, int]:
@@ -126,21 +137,33 @@ def build_exec_tables(sched: PipelineSchedule) -> ExecTables:
           if ("W", m, g) in times}
 
     # --- buffer slot assignment (per rank-chunk interval colouring) -------
+    # A slot is held until its last reader, the B tick (zb1p's W op reads
+    # the grad stash, not the x/g rings — B is still the rings' last
+    # reader).  The stash gets its own colouring over the B→W pendency
+    # windows; its per-(rank, chunk) peak is core.schedules.zb_pending_peak,
+    # which is what the memory model prices for zb1p.
     xiv: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
     giv: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
+    siv: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
     for m in range(M):
         for g in range(G):
             r, c = own[m][g]
+            t_rel = tB[(m, g)]                      # last read releases slot
             if g > 0:       # boundary input arrives when upstream F finishes
                 xiv.setdefault((r, c), []).append(
-                    (tF[(m, g - 1)], tB[(m, g)], m))
+                    (tF[(m, g - 1)], t_rel, m))
             if g < G - 1:   # cotangent arrives when downstream B finishes
                 giv.setdefault((r, c), []).append(
-                    (tB[(m, g + 1)], tB[(m, g)], m))
+                    (tB[(m, g + 1)], t_rel, m))
+            if (m, g) in tW:    # pending-dW lives from its B to its W tick
+                siv.setdefault((r, c), []).append(
+                    (tB[(m, g)], tW[(m, g)], m))
     xslot = {rc: _color_intervals(iv) for rc, iv in xiv.items()}
     gslot = {rc: _color_intervals(iv) for rc, iv in giv.items()}
+    sslot = {rc: _color_intervals(iv) for rc, iv in siv.items()}
     xs = max([max(sl.values()) + 1 for sl in xslot.values()] or [1])
     gs = max([max(sl.values()) + 1 for sl in gslot.values()] or [1])
+    ss = max([max(sl.values()) + 1 for sl in sslot.values()] or [1])
 
     def z(dtype=np.int32):
         return np.zeros((T, pp), dtype)
@@ -151,7 +174,8 @@ def build_exec_tables(sched: PipelineSchedule) -> ExecTables:
         z(np.float32)
     rfd_a, rfd_i, rfu_a, rfu_i = z(np.float32), z(), z(np.float32), z()
     rgd_a, rgd_i, rgu_a, rgu_i = z(np.float32), z(), z(np.float32), z()
-    w_act, w_micro, w_chunk = z(np.float32), z(), z()
+    w_act, w_micro, w_chunk, b_si, w_si = \
+        z(np.float32), z(), z(), z(), z()
 
     for m in range(M):
         for g in range(G):
@@ -175,6 +199,8 @@ def build_exec_tables(sched: PipelineSchedule) -> ExecTables:
             b_chunk[t, r] = c
             b_xidx[t, r] = c * xs + (xslot[(r, c)][m] if g > 0 else 0)
             b_gidx[t, r] = c * gs + (gslot[(r, c)][m] if g < G - 1 else 0)
+            if (m, g) in tW:
+                b_si[t, r] = c * ss + sslot[(r, c)][m]
             if g > 0:
                 r2, c2 = own[m][g - 1]
                 down = (r2 - r) % pp == 1
@@ -188,6 +214,7 @@ def build_exec_tables(sched: PipelineSchedule) -> ExecTables:
                 w_act[t, r] = 1.0
                 w_micro[t, r] = m
                 w_chunk[t, r] = c
+                w_si[t, r] = c * ss + sslot[(r, c)][m]
 
     return ExecTables(
         schedule=sched.name, pp=pp, n_chunks=v, n_micro=M, n_stages=G, T=T,
@@ -198,4 +225,5 @@ def build_exec_tables(sched: PipelineSchedule) -> ExecTables:
         fsend_down=fsd, fsend_up=fsu, bsend_down=bsd, bsend_up=bsu,
         rfd_act=rfd_a, rfd_idx=rfd_i, rfu_act=rfu_a, rfu_idx=rfu_i,
         rgd_act=rgd_a, rgd_idx=rgd_i, rgu_act=rgu_a, rgu_idx=rgu_i,
-        w_act=w_act, w_micro=w_micro, w_chunk=w_chunk)
+        w_act=w_act, w_micro=w_micro, w_chunk=w_chunk,
+        b_sidx=b_si, w_sidx=w_si, s_slots=ss)

@@ -143,6 +143,32 @@ def test_interleaved_needs_pp_multiple():
         make_schedule("interleaved", 2, 4, n_chunks=1)
 
 
+@pytest.mark.parametrize("name,pp,m,v", [g for g in GRID if g[1] > 1]
+                         + [("zb1p", pp, m, 1)
+                            for pp in (2, 3, 4) for m in (2, 5, 8)])
+def test_predicted_ticks_match_exec_tables(name, pp, m, v):
+    """Regression: ``predict_step_time``'s tick count is exactly the
+    executor table height (the pre-overlap model priced zb1p as
+    ``exec_ticks(1f1b) + 1``, W riding B's tick — now W ticks are real),
+    and its per-(tick, rank) activity agrees with the tables: the active
+    cell count equals M F-ticks + M B-ticks (+ M W-ticks under zb1p) per
+    (rank, chunk)."""
+    from repro.configs import get_spec
+    from repro.core.steptime import exec_tick_activity, predict_step_time
+    spec = get_spec("qwen2-1.5b")
+    sched = make_schedule(name, pp, m, n_chunks=v)
+    tab = build_exec_tables(sched)
+    pred = predict_step_time(spec, name, pp, m, n_chunks=v,
+                             micro_batch=1, seq_len=128)
+    assert pred.ticks == tab.T
+    acts = np.array(exec_tick_activity(name, pp, m, n_chunks=v))
+    active = (tab.f_act > 0) | (tab.b_act > 0)
+    if tab.w_act is not None:
+        active |= tab.w_act > 0
+    assert np.array_equal(acts > 0, active)
+    assert pred.ticks_active == int(active.sum())
+
+
 # ---------------------------------------------------------------------------
 # Property-based widening (CI installs hypothesis; skipped when absent,
 # without taking the deterministic grid above down with it)
@@ -186,3 +212,30 @@ if HAVE_HYPOTHESIS:
         assert [sched.rank_peak_in_flight(r) for r in range(pp)] == \
             [min(ma, pp - r) + min(mb, r + 1) for r in range(pp)]
         _check_exec_routing(sched)
+
+    @settings(max_examples=60, deadline=None)
+    @given(name=st.sampled_from(["1f1b", "zb1p", "interleaved", "dualpipe"]),
+           pp=st.integers(2, 5), groups=st.integers(1, 3),
+           v=st.integers(2, 3))
+    def test_hyp_active_ticks_match_work_totals(name, pp, groups, v):
+        """The overlap engine's cost model rests on this: per rank, the exec
+        tables carry exactly M F-ticks and M B-ticks per owned chunk, plus
+        M W-ticks under zb1p (and zero W otherwise), and
+        ``exec_tick_activity``'s nonzero cells are exactly the active cells
+        — so ``ticks_active < ticks_total`` is real skipped work, not
+        bookkeeping drift."""
+        from repro.core.steptime import exec_tick_activity
+        m = pp * groups if name == "interleaved" else 3 * groups
+        v = v if name == "interleaved" else (2 if name == "dualpipe" else 1)
+        sched = make_schedule(name, pp, m, n_chunks=v)
+        tab = build_exec_tables(sched)
+        per_rank = m * v if name == "interleaved" else m
+        for r in range(pp):
+            assert int((tab.f_act[:, r] > 0).sum()) == per_rank
+            assert int((tab.b_act[:, r] > 0).sum()) == per_rank
+            w = int((tab.w_act[:, r] > 0).sum())
+            assert w == (m if name == "zb1p" else 0)
+        acts = np.array(exec_tick_activity(name, pp, m, n_chunks=v))
+        active = (tab.f_act > 0) | (tab.b_act > 0) | (tab.w_act > 0)
+        assert np.array_equal(acts > 0, active)
+        assert int(active.sum()) < acts.size   # idle cells exist at pp > 1

@@ -5,7 +5,10 @@ the sp=1 (single-device) step's loss and post-update master params to
 bf16-accumulation tolerance.
 
 Fast tier: one dense pp2×dp2×tp2×sp2 run with ZeRO-1 on, plus the loud
-indivisible-seq guard.  Slow tier: the full schedule × pp{1,2,4} × tp2 ×
+indivisible-seq guard, plus the overlap engine's SP-composed A/B check —
+``gate_compute=False`` swaps every ``lax.cond`` for compute-both +
+``jnp.where`` and must agree with the gated step bit-for-bit, proving the
+gating changes cost, never SP numerics.  Slow tier: the full schedule × pp{1,2,4} × tp2 ×
 sp grid (pp=1 only under 1f1b — interleaved/dualpipe require pp >= 2; the
 sp=1 legs of the grid are exactly `tests/test_pipeline_3d.py` /
 `test_pipeline_1f1b.py`, so only the sp=tp legs run here), the MoE/MLA
@@ -87,6 +90,28 @@ DENSE_FAST = HEADER + textwrap.dedent("""
     except ValueError as e:
         assert "sp=2" in str(e) and "s=31" in str(e), e
         print("SP_GUARD_OK")
+""")
+
+SP_GATE_AB = HEADER + textwrap.dedent("""
+    import numpy as np
+    spec = dataclasses.replace(get_spec("qwen2-1.5b", smoke=True), n_layers=8)
+    model = build_model(spec)
+    state = init_train_state(model.init(jax.random.PRNGKey(0)))
+    batch = make_batch(config_for(spec, 8, 32), 0)
+    mesh = jax.make_mesh((2, 2, 2), ("pipe", "data", "model"))
+    outs = {}
+    for gate in (True, False):
+        step = make_pipeline_train_step(model, TrainConfig(n_micro=4), mesh,
+                                        zero=ZeROStage.OS, sp=True,
+                                        gate_compute=gate)
+        outs[gate] = jax.jit(step)(state, batch)
+    (sg, mg), (su, mu) = outs[True], outs[False]
+    assert float(mg["loss"]) == float(mu["loss"]), \
+        (float(mg["loss"]), float(mu["loss"]))
+    for a, b in zip(jax.tree.leaves(sg.master), jax.tree.leaves(su.master)):
+        assert np.array_equal(jax.device_get(a), jax.device_get(b)), \
+            "gated vs ungated SP master params differ bitwise"
+    print("SP_GATE_AB_OK")
 """)
 
 DENSE_GRID_BODY = textwrap.dedent("""
@@ -188,6 +213,16 @@ def test_sp_dense_fast():
     tier-1 SP smoke."""
     r = _run(DENSE_FAST)
     assert "PP2_DP2_TP2_SP2_ZOS_OK" in r.stdout and "SP_GUARD_OK" in r.stdout, \
+        f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+
+
+def test_sp_gate_compute_ab_bitwise():
+    """Cond gating composes with SP: the gated (lax.cond) and ungated
+    (compute-both + jnp.where) executors agree bit-for-bit on loss and
+    post-update master params when the tick body carries SP's
+    all-gather/reduce-scatter collectives inside the gated branches."""
+    r = _run(SP_GATE_AB)
+    assert "SP_GATE_AB_OK" in r.stdout, \
         f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
 
 

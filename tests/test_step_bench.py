@@ -9,7 +9,11 @@
   by hand from the PaLM 3× convention);
 * ``benchmarks.step_bench.check_direction`` — accepts a consistent
   ranking, flags an inverted one, treats close predictions as ties, and
-  never compares across chunk granularities.
+  never compares across chunk granularities or mesh cells (dp/ep/zero are
+  part of the cell key);
+* ``benchmarks.step_bench.check_convergence`` — the overlap gate: zb1p
+  must measure within the tie band of 1f1b, and every pp>1 row must skip
+  idle rank-ticks (``ticks_active < ticks_total``).
 
 The measured grid itself runs in ``benchmarks/step_bench.py`` (CI's
 step-bench-smoke job); these tests pin the harness logic that the
@@ -20,7 +24,8 @@ import time
 
 import pytest
 
-from benchmarks.step_bench import KEY_FIELDS, check_direction
+from benchmarks.step_bench import (KEY_FIELDS, check_convergence,
+                                   check_direction)
 from repro.train.timing import TimingResult, merge_rows, time_callable
 
 
@@ -135,10 +140,14 @@ def test_mfu_hand_computed_dense():
 # check_direction (the CI gate)
 # ---------------------------------------------------------------------------
 
-def _bench_row(schedule, measured, predicted, *, pp=2, n_chunks=1):
-    return {"arch": "a", "schedule": schedule, "pp": pp, "tp": 2,
-            "sp": False, "n_micro": 4, "n_chunks": n_chunks, "batch": 8,
-            "seq_len": 32, "median_s": measured, "predicted_s": predicted}
+def _bench_row(schedule, measured, predicted, *, pp=2, n_chunks=1,
+               dp=2, ep=1, zero="os", **extra):
+    row = {"arch": "a", "schedule": schedule, "pp": pp, "dp": dp, "tp": 2,
+           "sp": False, "ep": ep, "zero": zero, "n_micro": 4,
+           "n_chunks": n_chunks, "batch": 8, "seq_len": 32,
+           "median_s": measured, "predicted_s": predicted}
+    row.update(extra)
+    return row
 
 
 def test_direction_ok_on_consistent_ranking():
@@ -178,3 +187,61 @@ def test_direction_separates_pp_cells():
     rows = [_bench_row("1f1b", 1.0, 1.0, pp=2),
             _bench_row("zb1p", 0.5, 2.0, pp=4)]
     assert check_direction(rows) == []
+
+
+def test_direction_separates_mesh_cells():
+    """dp/ep/zero are part of the cell key: a zb1p row on a different mesh
+    (or ZeRO stage) is never ranked against a 1f1b row — even when their
+    (pp, tp, sp) coordinates coincide."""
+    rows = [_bench_row("1f1b", 1.0, 1.0, dp=2),
+            _bench_row("zb1p", 2.0, 0.5, dp=1)]
+    assert check_direction(rows) == []
+    rows = [_bench_row("1f1b", 1.0, 1.0, zero="os"),
+            _bench_row("zb1p", 2.0, 0.5, zero="os+g")]
+    assert check_direction(rows) == []
+    rows = [_bench_row("1f1b", 1.0, 1.0, ep=1),
+            _bench_row("zb1p", 2.0, 0.5, ep=2)]
+    assert check_direction(rows) == []
+    # same mesh -> the inversion is caught
+    rows = [_bench_row("1f1b", 1.0, 1.0), _bench_row("zb1p", 2.0, 0.5)]
+    assert len(check_direction(rows)) == 1
+
+
+# ---------------------------------------------------------------------------
+# check_convergence (the overlap gate)
+# ---------------------------------------------------------------------------
+
+def _conv_row(schedule, measured, *, pp=2, total=20, active=16, **extra):
+    return _bench_row(schedule, measured, measured, pp=pp,
+                      ticks_total=total, ticks_active=active, **extra)
+
+
+def test_convergence_accepts_zb_at_or_below_1f1b():
+    rows = [_conv_row("1f1b", 1.0), _conv_row("zb1p", 0.9)]
+    assert check_convergence(rows) == []
+    # inside the tie band is fine too
+    rows = [_conv_row("1f1b", 1.0), _conv_row("zb1p", 1.08)]
+    assert check_convergence(rows) == []
+
+
+def test_convergence_flags_zb_above_band():
+    rows = [_conv_row("1f1b", 1.0), _conv_row("zb1p", 1.2)]
+    bad = check_convergence(rows)
+    assert len(bad) == 1 and "zb1p" in bad[0]
+
+
+def test_convergence_requires_skipped_ticks():
+    rows = [_conv_row("1f1b", 1.0, total=20, active=20)]
+    bad = check_convergence(rows)
+    assert len(bad) == 1 and "ticks_active" in bad[0]
+    # pp=1 rows are exempt (no pipeline, nothing to skip)
+    assert check_convergence([_conv_row("1f1b", 1.0, pp=1,
+                                        total=4, active=4)]) == []
+    # rows predating the overlap engine fail loudly, not silently
+    legacy = _bench_row("1f1b", 1.0, 1.0)
+    assert len(check_convergence([legacy])) == 1
+
+
+def test_convergence_separates_mesh_cells():
+    rows = [_conv_row("1f1b", 1.0, dp=2), _conv_row("zb1p", 5.0, dp=1)]
+    assert check_convergence(rows) == []

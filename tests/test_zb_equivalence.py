@@ -2,17 +2,22 @@
 schedule="zb1p")`` reproduces the pp=1 single-device step to
 bf16-accumulation tolerance.
 
-The zb1p executor's W rendering is a pure *reordering* of fp32 adds: the B
-tick stashes the layer gradients in the scan-carried pending buffer and
-the W tick flushes them into the accumulated gl — so the post-step master
-params, loss and first-moment norms must match the reference exactly as
-tightly as the 1f1b path does (``check()``'s 5e-3 / 2e-2 / 5e-2 bands,
-shared with ``test_sp_equivalence.py``).  Shared embed/head/final-norm
-grads bypass the stash (they accumulate at B), which this grid would
-catch as a first-moment norm mismatch if either side double-counted.
+The zb1p executor runs the real ZB-H1 split: the B tick runs the full
+chunk vjp once (no recompute replay) and parks the fp32 pending-dW in the
+scan-carried stash ring; the dedicated W tick flushes that stash slot into
+the grad accumulator — so the post-step master params, loss and
+first-moment norms must match the reference exactly as tightly as the
+1f1b path does (``check()``'s 5e-3 / 2e-2 / 5e-2 bands, shared with
+``test_sp_equivalence.py``).  Shared embed/head/final-norm grads
+accumulate at B (they never enter the stash), which this grid would catch
+as a first-moment norm mismatch if either side double- or under-counted.
 
-Fast tier: one dense pp2 × dp2 × tp2 run with ZeRO-1 on.  Slow tier:
-pp{2,4} × tp2 × {dense, MLA+MoE} × ZeRO-1, plus zb1p×SP composition.
+Fast tier: one dense pp2 × dp2 × tp2 run with ZeRO-1 on, plus the overlap
+engine's A/B check — ``gate_compute=False`` replaces every ``lax.cond``
+with compute-both + ``jnp.where`` (the pre-overlap masked executor) and
+must agree with the gated step bit-for-bit, proving the cond gating
+changes cost, never numerics.  Slow tier: pp{2,4} × tp2 × {dense,
+MLA+MoE} × ZeRO-1, plus zb1p×SP composition.
 
 Needs >1 fake device set before jax initialises — subprocess with XLA_FLAGS.
 """
@@ -39,6 +44,30 @@ ZB_FAST = HEADER + textwrap.dedent("""
                                     schedule="zb1p", zero=ZeROStage.OS)
     s2, m2 = jax.jit(step)(state, batch)
     check("ZB1P_PP2_DP2_TP2_ZOS", m1, s1, m2, s2)
+""")
+
+ZB_GATE_AB = HEADER + textwrap.dedent("""
+    import numpy as np
+    spec = dataclasses.replace(get_spec("qwen2-1.5b", smoke=True), n_layers=8)
+    model = build_model(spec)
+    state = init_train_state(model.init(jax.random.PRNGKey(0)))
+    batch = make_batch(config_for(spec, 8, 32), 0)
+    mesh = jax.make_mesh((2, 2, 2), ("pipe", "data", "model"))
+    outs = {}
+    for sched in ("zb1p", "1f1b"):
+        for gate in (True, False):
+            step = make_pipeline_train_step(
+                model, TrainConfig(n_micro=4), mesh, schedule=sched,
+                zero=ZeROStage.OS, gate_compute=gate)
+            outs[(sched, gate)] = jax.jit(step)(state, batch)
+        (sg, mg), (su, mu) = outs[(sched, True)], outs[(sched, False)]
+        assert float(mg["loss"]) == float(mu["loss"]), \
+            (sched, float(mg["loss"]), float(mu["loss"]))
+        for a, b in zip(jax.tree.leaves(sg.master),
+                        jax.tree.leaves(su.master)):
+            assert np.array_equal(jax.device_get(a), jax.device_get(b)), \
+                f"{sched}: gated vs ungated master params differ bitwise"
+        print(f"GATE_AB_{sched}_OK")
 """)
 
 ZB_DENSE_GRID = HEADER + textwrap.dedent("""
@@ -94,6 +123,17 @@ def test_zb1p_dense_fast():
     r = _run(ZB_FAST)
     assert "ZB1P_PP2_DP2_TP2_ZOS_OK" in r.stdout, \
         f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+
+
+def test_gate_compute_ab_bitwise():
+    """The overlap engine's cond gating is cost-only: gated (lax.cond) and
+    ungated (compute-both + jnp.where) steps agree bit-for-bit on loss and
+    post-update master params, for both the split (zb1p) and fused (1f1b)
+    backward."""
+    r = _run(ZB_GATE_AB)
+    for tag in ["GATE_AB_zb1p_OK", "GATE_AB_1f1b_OK"]:
+        assert tag in r.stdout, \
+            f"missing {tag}\nstdout={r.stdout}\nstderr={r.stderr[-3000:]}"
 
 
 @pytest.mark.slow

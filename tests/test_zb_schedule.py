@@ -14,16 +14,20 @@ and widened by hypothesis when installed:
   B; all of ``PipelineSchedule.check()``'s dep/capacity invariants;
 * closed forms: canonical makespan ``3M + 2(pp-1) - min(M-1, pp-1)``,
   per-rank in-flight peak ``min(M, pp-r)`` == ``schedule_in_flight`` ==
-  the simulated ``in_flight_series`` peak, executor tick count exactly
-  ``exec_ticks(1f1b) + 1`` (one drain tick for the last W);
+  the simulated ``in_flight_series`` peak; the executor timeline gives W
+  dedicated cond-gated ticks (never sharing a rank-tick with that rank's
+  own F or B — exactly M of each kind per rank);
 * ``core.steptime.bubble_fraction``: zb1p <= 1f1b at equal (pp, M), with
   the canonical idle count ``2(pp-1) - min(M-1, pp-1)`` per rank;
 * the executor tables route zb1p's boundary tensors exactly as 1f1b's
   (W adds no traffic), and ``w_act``/``w_micro``/``w_chunk`` mark each
-  (m, stage) exactly once, after its B tick;
-* ``estimate_memory(schedule="zb1p")`` carries the fp32 pending-dW stash
-  in the grads column (activations unchanged vs 1f1b), and the planner
-  prices zb1p configs via ``predicted_step_s``.
+  (m, stage) exactly once, strictly after its B tick, flushing the stash
+  slot (``w_sidx``) its B wrote (``b_sidx``) — ring depth ``s_slots`` ==
+  the peak of ``zb_pending_peak``;
+* ``estimate_memory(schedule="zb1p")`` carries the B→W pending-dW stash
+  in the grads column (activations match 1f1b — B runs the full vjp and
+  retires the microbatch), and the planner prices zb1p configs via
+  ``predicted_step_s``.
 """
 
 import numpy as np
@@ -76,11 +80,21 @@ def test_zb1p_bubble_below_1f1b(pp, m):
 
 
 @pytest.mark.parametrize("pp,m", [(2, 2), (2, 4), (3, 5), (4, 4), (4, 8)])
-def test_zb1p_exec_one_drain_tick(pp, m):
-    """The masked executor packs one F and one B per tick; W rides the same
-    tick as a B except the very last W, which needs one drain tick — so
-    zb1p's executor timeline is exactly 1f1b's plus one."""
-    assert exec_ticks("zb1p", pp, m) == exec_ticks("1f1b", pp, m) + 1
+def test_zb1p_exec_w_only_ticks(pp, m):
+    """The overlap engine gives W its own cond-gated tick: a rank's W never
+    shares a tick with that rank's own F or B, so zb1p's timeline is
+    strictly longer than 1f1b's — per rank exactly M F-ticks, M B-ticks and
+    M W-ticks, cond-gated so the extra ticks only cost W's work."""
+    assert exec_ticks("zb1p", pp, m) > exec_ticks("1f1b", pp, m)
+    tab = build_exec_tables(make_schedule("zb1p", pp, m))
+    for r in range(pp):
+        assert int(tab.f_act[:, r].sum()) == m
+        assert int(tab.b_act[:, r].sum()) == m
+        assert int(tab.w_act[:, r].sum()) == m
+        # dedicated W ticks: no rank-tick carries W alongside its own F/B
+        clash = (tab.w_act[:, r] > 0) & \
+            ((tab.f_act[:, r] > 0) | (tab.b_act[:, r] > 0))
+        assert not clash.any()
 
 
 @pytest.mark.parametrize("pp,m", [(2, 4), (3, 5), (4, 8)])
@@ -88,19 +102,36 @@ def test_zb1p_exec_tables(pp, m):
     sched = make_schedule("zb1p", pp, m)
     tab = build_exec_tables(sched)
     assert tab.w_act is not None
-    # every (micro, rank) W fires exactly once, strictly after its B
+    # every (micro, rank) W fires exactly once, strictly after its B, and
+    # flushes exactly the stash slot its B wrote the pending-dW into; no
+    # two microbatches pending at once on a rank share a slot (interval
+    # colouring), and the ring depth is the schedule-wide peak pendency
+    from repro.core.schedules import zb_pending_peak
+    assert tab.s_slots == max(zb_pending_peak(pp, m))
     times = exec_tick_times(sched)
     seen = set()
+    b_slot = {}
     for t in range(tab.T):
         for r in range(pp):
+            if tab.b_act[t, r] > 0:
+                b_slot[(int(tab.b_micro[t, r]), r)] = int(tab.b_sidx[t, r])
             if tab.w_act[t, r] > 0:
                 mm = int(tab.w_micro[t, r])
                 assert (mm, r) not in seen
                 seen.add((mm, r))
-                assert times[("B", mm, r)] < t or \
-                    times[("B", mm, r)] == t  # W may share its B's tick
+                assert times[("B", mm, r)] < t    # strictly after its B
                 assert int(tab.w_chunk[t, r]) == 0
+                assert int(tab.w_sidx[t, r]) == b_slot[(mm, r)]
     assert seen == {(mm, r) for mm in range(m) for r in range(pp)}
+    # no-overlap: microbatches whose B→W windows intersect on a rank get
+    # distinct stash slots
+    for r in range(pp):
+        wins = [(times[("B", mm, r)], times[("W", mm, r)], b_slot[(mm, r)])
+                for mm in range(m)]
+        for i, (b1, w1, s1) in enumerate(wins):
+            for b2, w2, s2 in wins[i + 1:]:
+                if b1 < w2 and b2 < w1:
+                    assert s1 != s2
     # 1f1b activates no W columns
     base = build_exec_tables(make_schedule("1f1b", pp, m))
     assert base.w_act is None or not np.any(base.w_act)
@@ -120,27 +151,35 @@ def test_zb1p_needs_single_chunk():
 
 
 def test_zb1p_memory_carries_pending_stash():
-    """estimate_memory(schedule='zb1p'): grads = 1f1b's + one fp32 copy of
-    the rank's *layer* grads (the scan-carry stash is DP-replicated and
-    excludes the embed/head grads, which accumulate at B directly)."""
+    """estimate_memory(schedule='zb1p'): activations/params/optimizer match
+    1f1b's (B runs the full vjp, so residency is identical); the grads
+    column carries the B→W stash — one fp32 copy of the rank's per-layer
+    (non-shared) grads per pending microbatch, allocated uniformly at the
+    schedule-wide ``max(zb_pending_peak)`` (the executor's scan-carried
+    stash ring depth, ``ExecTables.s_slots``)."""
     from repro.configs import get_spec
     from repro.core import estimate_memory
     from repro.core.parallel_config import ParallelConfig, ZeROStage
     from repro.core.params import device_params
+    from repro.core.activations import rank_chunk_layers
+    from repro.core.schedules import zb_pending_peak
 
     spec = get_spec("qwen2-1.5b")
     cfg = ParallelConfig(dp=2, tp=2, pp=2, zero=ZeROStage.OS,
                          micro_batch=1, seq_len=2048)
+    pend = max(zb_pending_peak(cfg.pp, 2 * cfg.pp))
     for r in range(cfg.pp):
         zb = estimate_memory(spec, cfg, stage=r, schedule="zb1p")
         base = estimate_memory(spec, cfg, stage=r, schedule="1f1b")
         assert zb.activations == base.activations
         assert zb.params == base.params and zb.optimizer == base.optimizer
-        from repro.core.activations import rank_chunk_layers
         layers = [l for ls in rank_chunk_layers(spec, cfg.pp,
-                                                schedule="zb1p")[r] for l in ls]
+                                                schedule="zb1p")[r]
+                  for l in ls]
         dev = device_params(spec, cfg, layers=layers)
-        assert zb.grads == base.grads + (dev.total - dev.embed) * 4
+        stash = pend * (dev.total - dev.embed) * 4    # fp32 layer grads
+        assert zb.grads == base.grads + stash
+        assert stash > 0
 
 
 def test_planner_prices_zb1p():
@@ -185,3 +224,11 @@ if HAVE_HYPOTHESIS:
         if pp > 1:
             from test_schedules import _check_exec_routing
             _check_exec_routing(sched)
+            # closed-form work totals: the exec tables give every rank
+            # exactly M F-ticks, M B-ticks and M W-ticks — no W rides a
+            # B tick, none goes missing
+            tab = build_exec_tables(sched)
+            for r in range(pp):
+                assert int((tab.f_act[:, r] > 0).sum()) == m
+                assert int((tab.b_act[:, r] > 0).sum()) == m
+                assert int((tab.w_act[:, r] > 0).sum()) == m
