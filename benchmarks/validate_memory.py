@@ -274,6 +274,15 @@ def _validate_pp_rec(rec: Dict[str, Any],
             "in_flight": s["in_flight"],
             "chunks": s.get("chunks"),
             "xla_temp_bytes": temps[i],
+            # Measured persistent-input bytes and the analytic param-state
+            # columns: the pair the ZeRO ladder acceptance compares —
+            # ``--zero os+g+params`` rows must show both shrink vs the
+            # matching os+g row (params shard over DP; the gather
+            # transient is the price of re-assembly on use).
+            "xla_arg_bytes": s["memory"].get("argument_size_in_bytes", 0),
+            "analytic_param_bytes": s["analytic"].get("params", 0),
+            "analytic_gather_bytes": s["analytic"].get(
+                "gather_transient", 0),
             "analytic_act_bytes": acts[i],
             "analytic_total_bytes": s["analytic"]["total"],
         } for i, s in enumerate(stages)],

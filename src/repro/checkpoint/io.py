@@ -21,20 +21,47 @@ PyTree = Any
 _SEP = "::"
 
 
+def _key(path) -> str:
+    return _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path)
+
+
+def _gather_full(leaf):
+    """Assemble a device-sharded jax.Array (e.g. ZeRO-sharded state) into
+    one host copy: jit-identity with a fully-replicated out sharding — the
+    all-gather runs on device, so leaves whose shards live across the DP
+    group (``os+g+params`` working params, sharded optimizer state)
+    checkpoint without a crash instead of tripping ``np.asarray`` on a
+    non-fully-addressable array."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    sharding = getattr(leaf, "sharding", None)
+    mesh = getattr(sharding, "mesh", None)
+    if mesh is None:
+        return np.asarray(jax.device_get(leaf))
+    out = jax.jit(lambda a: a,
+                  out_shardings=NamedSharding(mesh, PartitionSpec()))(leaf)
+    return np.asarray(jax.device_get(out))
+
+
 def _flatten(tree: PyTree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    out = {}
+    out, gathered = {}, {}
     for path, leaf in flat:
-        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
-                        for p in path)
-        out[key] = np.asarray(leaf)
-    return out, treedef
+        key = _key(path)
+        sharded = (isinstance(leaf, jax.Array)
+                   and not getattr(leaf, "is_fully_replicated", True))
+        if sharded:
+            out[key] = _gather_full(leaf)
+        else:
+            out[key] = np.asarray(leaf)
+        gathered[key] = bool(sharded)
+    return out, treedef, gathered
 
 
 def save(directory: str, step: int, tree: PyTree) -> str:
     d = os.path.join(directory, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
-    flat, _ = _flatten(tree)
+    flat, _, gathered = _flatten(tree)
     shard = jax.process_index()
     path = os.path.join(d, f"state_{shard:03d}.npz")
     # npz can't hold ml_dtypes (bf16 etc.) — store them as a uint16 view;
@@ -43,7 +70,11 @@ def save(directory: str, step: int, tree: PyTree) -> str:
                     v.dtype.name == "bfloat16" else v)
                 for k, v in flat.items()}
     np.savez(path, **storable)
-    manifest = {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+    # "gathered" notes leaves that were device-sharded at save time and
+    # written as the assembled full array (ZeRO save-on-gather); restore
+    # re-shards them onto the target tree's sharding.
+    manifest = {k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                    "gathered": gathered[k]}
                 for k, v in flat.items()}
     with open(os.path.join(d, "manifest.json"), "w") as f:
         json.dump({"step": step, "leaves": manifest}, f, indent=1)
@@ -59,17 +90,30 @@ def latest_step(directory: str) -> Optional[int]:
 
 
 def restore(directory: str, step: int, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (validates shapes/dtypes)."""
+    """Restore into the structure of ``like`` (validates shapes/dtypes).
+    Leaves whose ``like`` counterpart is a device-sharded jax.Array are
+    ``device_put`` back onto that sharding, so a ZeRO-sharded TrainState
+    round-trips to its sharded layout (each device re-adopts its slice of
+    the gathered full array the manifest marked ``gathered``)."""
     d = os.path.join(directory, f"step_{step:08d}")
     shard = jax.process_index()
     data = np.load(os.path.join(d, f"state_{shard:03d}.npz"))
-    flat, treedef = _flatten(like)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
-    for key, ref_leaf in flat.items():
+    for path, ref_leaf in flat:
+        key = _key(path)
         arr = data[key]
-        assert arr.shape == ref_leaf.shape, (key, arr.shape, ref_leaf.shape)
-        if ref_leaf.dtype.name == "bfloat16" and arr.dtype == np.uint16:
+        ref_dtype = jnp.asarray(ref_leaf).dtype if not hasattr(
+            ref_leaf, "dtype") else ref_leaf.dtype
+        assert arr.shape == tuple(np.shape(ref_leaf)), \
+            (key, arr.shape, np.shape(ref_leaf))
+        if ref_dtype == jnp.bfloat16 and arr.dtype == np.uint16:
             import ml_dtypes
             arr = arr.view(ml_dtypes.bfloat16)
-        leaves.append(jnp.asarray(arr, dtype=ref_leaf.dtype))
+        sharding = getattr(ref_leaf, "sharding", None)
+        if isinstance(ref_leaf, jax.Array) and sharding is not None:
+            leaves.append(jax.device_put(
+                jnp.asarray(arr, dtype=ref_dtype), sharding))
+        else:
+            leaves.append(jnp.asarray(arr, dtype=ref_dtype))
     return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -14,7 +14,7 @@ from typing import Dict, Optional
 from .activations import stage_activation_bytes
 from .notation import ModelSpec, human_bytes
 from .params import device_params
-from .parallel_config import ParallelConfig
+from .parallel_config import ParallelConfig, ZeROStage
 from .zero import zero_memory
 
 
@@ -26,6 +26,11 @@ class MemoryEstimate:
     activations: int
     comm_buffers: int
     fragmentation: int
+    # ZeRO-3 gather-on-use working copy: the largest chunk's full bf16
+    # params, alive from a tick's all-gather until its grads retire —
+    # priced like the zb1p pending-dW ring (transient, but resident at
+    # peak).  Zero for every other ZeRO stage and on the paper path.
+    gather_transient: int = 0
 
     @property
     def state_total(self) -> int:
@@ -33,8 +38,8 @@ class MemoryEstimate:
 
     @property
     def total(self) -> int:
-        return (self.state_total + self.activations
-                + self.comm_buffers + self.fragmentation)
+        return (self.state_total + self.activations + self.comm_buffers
+                + self.gather_transient + self.fragmentation)
 
     def breakdown(self) -> Dict[str, int]:
         return {
@@ -43,6 +48,7 @@ class MemoryEstimate:
             "optimizer": self.optimizer,
             "activations": self.activations,
             "comm_buffers": self.comm_buffers,
+            "gather_transient": self.gather_transient,
             "fragmentation": self.fragmentation,
             "total": self.total,
         }
@@ -105,6 +111,7 @@ def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
         params, grads, opt = state.params, state.grads, state.optimizer
         acts = schedule_activation_bytes(spec, cfg, rank, schedule=schedule,
                                          n_chunks=n_chunks, n_micro=n_micro)
+        zp = cfg.zero == ZeROStage.OS_G_PARAMS
         if schedule == "zb1p":
             # The B→W stash: one fp32 pending-dW copy of the rank's
             # per-layer grads per pending microbatch, parked in the
@@ -118,13 +125,33 @@ def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
             m_eff = n_micro if n_micro is not None else 2 * cfg.pp
             pend = max(zb_pending_peak(cfg.pp, m_eff))
             dev = device_params(spec, cfg, layers=layers)
-            grads += pend * (dev.total - dev.embed) * 4
-        subtotal = params + grads + opt + acts + cfg.comm_buffer_bytes
+            if zp:
+                # ZeRO-3: the stash is zeros_like the DP-sharded layer
+                # leaves — gather_params' backward hands B a shard-sized,
+                # already-reduced dW, so the ring shrinks with the params
+                stash_p = (-(-(dev.non_expert - dev.embed) // cfg.dp)
+                           + -(-dev.expert // cfg.edp))
+            else:
+                stash_p = dev.total - dev.embed
+            grads += pend * stash_p * 4
+        gather = 0
+        if zp and (cfg.dp > 1 or cfg.edp > 1):
+            # Gather-on-use working copy: the executor all-gathers one
+            # chunk's full bf16 params per F/B tick; the copy is live
+            # from the gather to the end of that chunk's grad retirement,
+            # so at peak one full (largest) chunk rides on top of the
+            # sharded residency — same transient-at-peak treatment as
+            # the zb1p pending-dW ring above.
+            gather = max(device_params(spec, cfg, layers=ls).total
+                         for ls in chunks) * cfg.dtype.weights
+        subtotal = (params + grads + opt + acts + cfg.comm_buffer_bytes
+                    + gather)
         frag = int(subtotal * cfg.fragmentation)
         return MemoryEstimate(params=params, grads=grads, optimizer=opt,
                               activations=acts,
                               comm_buffers=cfg.comm_buffer_bytes,
-                              fragmentation=frag)
+                              fragmentation=frag,
+                              gather_transient=gather)
     state = zero_memory(spec, cfg, stage=stage)
     if not training:
         dev = device_params(spec, cfg, stage=stage)

@@ -287,5 +287,6 @@ def device_param_bytes(spec: ModelSpec, cfg: ParallelConfig) -> int:
     d = device_params(spec, cfg)
     per = d.total
     if cfg.zero == ZeROStage.OS_G_PARAMS:
-        per = d.non_expert // cfg.dp + d.expert // cfg.edp
+        # ceil: shards are ceil(n/group)-sized, the last rank pads
+        per = -(-d.non_expert // cfg.dp) + -(-d.expert // cfg.edp)
     return per * cfg.dtype.weights

@@ -70,12 +70,13 @@ def executor_runnable(spec: ModelSpec, cfg: ParallelConfig, *,
     ('pipe','data','model') meshes with manual TP (exact divisibility
     required), Megatron-style sequence parallelism (degree tied to tp —
     ``make_pipeline_train_step(..., sp=True)``; the seq-sharded boundary
-    requires ``seq_len % tp == 0``), ZeRO os / os+g via sharding
-    constraints, and MoE either ETP-style (ep=1: all experts on every
-    shard, expert-ff sharded) or true expert-parallel
-    (``make_pipeline_train_step(..., ep=tp)``: expert-dim weight shards +
-    a2a token dispatch over 'model') — so grouped EP off the 'model' axis
-    (1 < ep < tp or ep ∤ devices), ZeRO-3 parameter partitioning, context
+    requires ``seq_len % tp == 0``), the full ZeRO ladder — os / os+g via
+    sharding constraints and os+g+params (ZeRO-3) via gather-on-use
+    parameter partitioning (``parallel.tp.gather_params``) — and MoE
+    either ETP-style (ep=1: all experts on every shard, expert-ff sharded)
+    or true expert-parallel (``make_pipeline_train_step(..., ep=tp)``:
+    expert-dim weight shards + a2a token dispatch over 'model') — so
+    grouped EP off the 'model' axis (1 < ep < tp or ep ∤ devices), context
     parallelism and the recurrent / enc-dec / VLM families remain analytic
     or GSPMD-dry-run territory."""
     if spec.ssm is not None:
@@ -105,8 +106,6 @@ def executor_runnable(spec: ModelSpec, cfg: ParallelConfig, *,
                            f"count {cfg.micro_batch * cfg.seq_len}")
     if cfg.etp not in (1, cfg.tp):
         return False, f"executor ties ETP to TP (etp={cfg.etp}, tp={cfg.tp})"
-    if cfg.zero == ZeROStage.OS_G_PARAMS:
-        return False, "ZeRO-3 parameter partitioning is dry-run-only"
     if schedule == "dualpipe" and cfg.pp < 2:
         return False, "dualpipe needs pp >= 2"
     # schedule constraints on the microbatch *count* (e.g. interleaved's
@@ -217,7 +216,8 @@ def plan(spec: ModelSpec, world_size: int, hbm_bytes: int, *,
                         spec, schedule, cfg.pp, m,
                         micro_batch=cfg.micro_batch, seq_len=cfg.seq_len,
                         n_chunks=n_chunks, tp=cfg.tp,
-                        sp=cfg.sp_degree > 1).total_s
+                        sp=cfg.sp_degree > 1,
+                        zero=cfg.zero, dp=cfg.dp).total_s
                 except ValueError:
                     pred = None
             entries.append(PlanEntry(cfg, est, budget=hbm_bytes,

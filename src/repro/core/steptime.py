@@ -242,6 +242,27 @@ def exec_ticks(schedule: str, pp: int, n_micro: int,
 
 
 @functools.lru_cache(maxsize=1024)
+def exec_tick_ops(schedule: str, pp: int, n_micro: int,
+                  n_chunks: int = 1) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+    """(T, pp) per-tick per-rank ``(nF, nB)`` op counts of the executor
+    timeline — the collective-volume view :func:`predict_step_time` uses to
+    price ZeRO-3's gather-on-use traffic (F all-gathers a chunk's params,
+    B all-gathers then reduce-scatters the weight cotangent; zb1p's W is a
+    pure stash flush with no parameter traffic, so it is not counted)."""
+    sched = make_schedule(schedule, pp, n_micro, n_chunks=n_chunks)
+    times = exec_tick_times(sched)
+    T = max(times.values()) + 1
+    counts = [[[0, 0] for _ in range(pp)] for _ in range(T)]
+    for (op, m, g), t in times.items():
+        r, _ = sched.owner(g, m)
+        if op == "F":
+            counts[t][r][0] += 1
+        elif op == "B":
+            counts[t][r][1] += 1
+    return tuple(tuple((a, b) for a, b in row) for row in counts)
+
+
+@functools.lru_cache(maxsize=1024)
 def exec_tick_activity(schedule: str, pp: int, n_micro: int,
                        n_chunks: int = 1, w_b_split: float = _W_B_SPLIT
                        ) -> Tuple[Tuple[float, ...], ...]:
@@ -296,6 +317,7 @@ def predict_step_time(spec: ModelSpec, schedule: str, pp: int,
                       tick_overhead_s: float = 0.0,
                       serialize_ranks: bool = False,
                       cache_bytes: float = 0.0,
+                      zero=None, dp: int = 1,
                       view: str = "overlapped") -> StepTimePrediction:
     """Predict what ``make_pipeline_train_step`` will measure for this
     (schedule, pp, tp, sp) on hardware with the given matmul throughput and
@@ -333,7 +355,17 @@ def predict_step_time(spec: ModelSpec, schedule: str, pp: int,
     rings for the down/up pair every schedule uses and four for dualpipe.
     Only *rankings* across schedules at fixed everything-else are
     load-bearing (CI's direction gate); absolute times need calibrated
-    constants."""
+    constants.
+
+    ``zero="os+g+params"`` (a ``ZeROStage`` or its string value) with
+    ``dp > 1`` prices ZeRO-3's gather-on-use traffic on top of the ring
+    payloads: every F tick all-gathers one chunk's bf16 params over the
+    DP group (``(dp-1)/dp`` of the full chunk crosses the wire) and every
+    B tick pays the same all-gather plus the weight-cotangent
+    reduce-scatter — per tick the slowest rank's volume (or the sum under
+    ``serialize_ranks``) joins the comm the compute must hide.  This is
+    the memory-for-comms trade the planner prices when ranking ZeRO-3
+    configs."""
     if view not in ("overlapped", "masked"):
         raise ValueError(f"unknown executor view {view!r}")
     v = norm_chunks(schedule, n_chunks)
@@ -363,16 +395,35 @@ def predict_step_time(spec: ModelSpec, schedule: str, pp: int,
     rings = 4 if schedule == "dualpipe" else 2
     payload = micro_batch * (seq_len // tp if sp else seq_len) * spec.h * 2
     comm_tick = rings * payload / bytes_per_s
+    z3 = str(getattr(zero, "value", zero)) == "os+g+params" and dp > 1
+    z3_f = z3_b = 0.0
+    z3_ops = None
+    if z3:
+        from .activations import rank_chunk_layers
+        from .parallel_config import ParallelConfig
+        from .params import device_params
+        cfgz = ParallelConfig(dp=dp, tp=tp, pp=pp, sp=sp,
+                              micro_batch=micro_batch, seq_len=seq_len)
+        chunk_layers = rank_chunk_layers(spec, pp, schedule=schedule,
+                                         n_chunks=v)[0][0]
+        chunk_bytes = device_params(spec, cfgz, layers=chunk_layers).total * 2
+        ag = chunk_bytes * (dp - 1) / dp / bytes_per_s
+        z3_f, z3_b = ag, 2 * ag        # F: gather; B: gather + grad scatter
+        z3_ops = exec_tick_ops(schedule, pp, n_micro, n_chunks=v)
     if view == "overlapped":
         compute_s = 0.0
         comm_s = 0.0                # only the part compute cannot hide
-        for row in acts:
+        for i, row in enumerate(acts):
             c = (sum(row) if serialize_ranks else max(row)) * chunk_fwd
+            ct = comm_tick
+            if z3:
+                per = [nf * z3_f + nb * z3_b for nf, nb in z3_ops[i]]
+                ct += sum(per) if serialize_ranks else max(per)
             compute_s += c
-            comm_s += max(0.0, comm_tick - c)
+            comm_s += max(0.0, ct - c)
     else:
         compute_s = ticks * (_W_F + _W_B_FUSED) * chunk_fwd
-        comm_s = ticks * comm_tick
+        comm_s = ticks * (comm_tick + z3_f + z3_b)
     ideal = bubble_fraction(schedule, pp, n_micro, v)
     return StepTimePrediction(
         schedule=schedule, pp=pp, n_micro=n_micro, n_chunks=v, view=view,

@@ -34,7 +34,9 @@ class TrainStateBytes:
 
 
 def _sharded(dev: DeviceParams, cfg: ParallelConfig, bytes_per: int) -> int:
-    return (dev.non_expert // cfg.dp + dev.expert // cfg.edp) * bytes_per
+    # Ceil division: a rank's shard is ceil(n/group) params — floor would
+    # under-count per-device bytes whenever the group doesn't divide n.
+    return (-(-dev.non_expert // cfg.dp) + -(-dev.expert // cfg.edp)) * bytes_per
 
 
 def zero_memory(spec: ModelSpec, cfg: ParallelConfig,

@@ -164,6 +164,63 @@ def pipeline_stage_specs(stacked: PyTree, mesh: Mesh, rules=None) -> PyTree:
     return jax.tree_util.tree_map_with_path(spec_for, stacked)
 
 
+def zero3_stage_specs(stacked: PyTree, mesh: Mesh, rules=None,
+                      dp_axes: Sequence[str] = ("pod", "data")):
+    """ZeRO-3 layout for stage-stacked pipeline params: the
+    ``pipeline_stage_specs`` layout with the data(+pod) axes added on the
+    first shardable *weight* dim of every leaf, plus a parallel tree of
+    gather dims for the executor's gather-on-use collectives.
+
+    Returns ``(specs, dims)`` where ``dims`` holds, per leaf, the
+    *stacked-tree* dim index carrying the DP shard, or ``-1`` when the leaf
+    stays replicated across DP (tiny tensors with no divisible dim — the
+    small-tensor fallback; the executor keeps the plain psum grad-reduce
+    for those).  ``-1`` is a sentinel rather than None because None leaves
+    vanish from pytrees.
+
+    Dim choice skips the structural dims the executor indexes away before
+    use: dim 0 is the pipe stage; for leaves under the top-level "layers"
+    key dim 1 is the interleaving chunk (V) dim and dim 2 the scanned
+    layer dim — the layer dim *is* shardable (the gather re-assembles it).
+    """
+    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+
+    def choice(path, leaf):
+        axes = _leaf_axes(path, leaf.ndim)
+        base = param_partition_spec(axes, mesh, rules)
+        entries = list(tuple(base) + (None,) * (leaf.ndim - len(tuple(base))))
+        entries[0] = "pipe" if "pipe" in mesh.axis_names else None
+        spec = _drop_indivisible(P(*entries), leaf.shape, mesh)
+        entries = list(tuple(spec) + (None,) * (leaf.ndim - len(tuple(spec))))
+        if dp_size <= 1:
+            return P(*entries), -1
+        used = set()
+        for e in entries:
+            if e is not None:
+                used.update((e,) if isinstance(e, str) else e)
+        if any(a in used for a in dp_axes):
+            return P(*entries), -1
+        top = getattr(path[0], "key", getattr(path[0], "name", str(path[0])))
+        min_dim = 2 if top == "layers" else 1
+        for i in range(min_dim, leaf.ndim):
+            e = entries[i]
+            existing = () if e is None else (
+                (e,) if isinstance(e, str) else tuple(e))
+            ex = int(np.prod([mesh.shape[n] for n in existing])) \
+                if existing else 1
+            if leaf.shape[i] % (ex * dp_size) == 0:
+                entries[i] = tuple(existing) + dp_axes
+                return P(*entries), i
+        return P(*entries), -1
+
+    specs = jax.tree_util.tree_map_with_path(
+        lambda p, l: choice(p, l)[0], stacked)
+    dims = jax.tree_util.tree_map_with_path(
+        lambda p, l: choice(p, l)[1], stacked)
+    return specs, dims
+
+
 def state_shardings(abstract_state, mesh: Mesh, zero: ZeROStage,
                     rules=None):
     """NamedSharding trees for a TrainState (params, master/m/v, step).

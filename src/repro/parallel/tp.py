@@ -191,6 +191,41 @@ pmean_sp.defvjp(_pmean_sp_fwd, _pmean_sp_bwd)
 
 
 # ---------------------------------------------------------------------------
+# ZeRO-3 gather-on-use boundary operator (all-gather over the DP axes)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def gather_params(x: jnp.ndarray, axes=("data",), dim: int = 0) -> jnp.ndarray:
+    """ZeRO-3's gather-on-use operator: the DP analogue of ğ, applied to
+    *weights* instead of activations.  Forward all-gathers a rank's
+    1/dp parameter shard along ``dim`` over the per-stage DP group
+    (``axes`` — a tuple so ('pod','data') meshes work), so the tick's
+    compute sees the full chunk weights; the gathered copy is a transient
+    that dies with the tick.  Backward reduce-scatters the weight
+    cotangent, which in one collective (a) sums the per-DP-replica grad
+    contributions (the job the executor's post-loop data psum does for
+    replicated leaves) and (b) re-shards the result onto the owner —
+    so gradients, like the ZeRO-2 spec requires, only ever materialize
+    shard-sized.  Same check_rep=False rationale as f/g: a plain
+    all_gather would transpose to psum_scatter of *already-summed*
+    cotangents only if jax could prove the forward input was unreplicated
+    per-shard data, which it can't here."""
+    return jax.lax.all_gather(x, axes, axis=dim, tiled=True)
+
+
+def _gather_params_fwd(x, axes, dim):
+    return jax.lax.all_gather(x, axes, axis=dim, tiled=True), None
+
+
+def _gather_params_bwd(axes, dim, _, ct):
+    return (jax.lax.psum_scatter(ct, axes, scatter_dimension=dim,
+                                 tiled=True),)
+
+
+gather_params.defvjp(_gather_params_fwd, _gather_params_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Expert-parallel token boundary operators (a2a dispatch over 'model')
 # ---------------------------------------------------------------------------
 #

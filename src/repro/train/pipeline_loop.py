@@ -128,6 +128,22 @@ data-major, those axes are exactly the per-stage DP group, so each DP
 shard holds 1/dp of its stage's optimizer bytes and XLA reduce-scatters
 grads into the sharded AdamW update.
 
+``os+g+params`` (ZeRO-3) goes one further: the bf16 *working* params
+themselves live DP-sharded (``parallel.sharding.zero3_stage_specs``
+extends the stacked per-stage specs with the data(+pod) axes on each
+leaf's first shardable weight dim) and every F/B tick *gathers on use* —
+``parallel.tp.gather_params``, the DP analogue of SP's ğ applied to
+weights: forward all-gathers the tick's chunk slice (a transient the
+memory model prices as ``gather_transient``), backward reduce-scatters
+the weight cotangent, which sums the cross-DP grad contributions and
+re-shards onto the owner in one collective.  The post-loop data psum is
+skipped for exactly the gathered leaves (their grads arrive summed and
+shard-sized); tiny leaves with no DP-divisible dim keep the replicated
+layout and the psum path (DeepSpeed's small-tensor fallback).  The
+gather/scatter live *inside* the cond-gated F/B branches — safe because
+the gate predicate depends only on the 'pipe' rank, so it is uniform
+across the 'data'(+'pod') axes the collectives run over.
+
 Semantics match ``train.loop.make_train_step``: fp32 gradient accumulation
 across microbatches, mean over n_micro, one AdamW update, loss metric
 ce + 0.01·aux per microbatch.  ``TrainState`` keeps the pp=1 layout — grads
@@ -180,11 +196,11 @@ from repro.models.pipeline import (check_pipeline_supported,
 from repro.optim.adamw import TrainState, adamw_update
 from repro.parallel.compat import shard_map
 from repro.parallel.sharding import (grad_shardings, pipeline_stage_specs,
-                                     state_shardings)
+                                     state_shardings, zero3_stage_specs)
 from repro.parallel.tp import (ce_sum_tp, check_ep_supported,
                                check_sp_supported, check_tp_supported,
                                copy_to_tp, embed_tp, gather_from_sp,
-                               tp_local_spec)
+                               gather_params, tp_local_spec)
 from repro.train.loop import TrainConfig, _split_micro
 from repro.train.schedules import build_exec_tables, make_schedule
 
@@ -281,10 +297,13 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     check_ep_supported(spec, tp, ep)
     rules = _EXEC_EP_RULES if ep > 1 else _EXEC_TP_RULES
     spec_run = tp_local_spec(spec, tp)
-    if zero == ZeROStage.OS_G_PARAMS:
-        raise NotImplementedError(
-            "executor ZeRO covers os / os+g; os+g+params (ZeRO-3 parameter "
-            "partitioning) remains dry-run-only")
+    # ZeRO-3 (os+g+params): bf16 working params live DP-sharded
+    # (zero3_stage_specs) and every F/B tick all-gathers the chunk's slice
+    # on use via parallel.tp.gather_params, whose backward reduce-scatters
+    # the weight cotangent — summing the cross-DP grad contributions and
+    # re-sharding in one collective, so the post-loop data psum is skipped
+    # for exactly the gathered leaves.
+    zp = zero == ZeROStage.OS_G_PARAMS
     S = mesh.shape["pipe"]
     M = cfg.n_micro
     sched = make_schedule(schedule, S, M, n_chunks=n_chunks)
@@ -333,7 +352,7 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
     def _run(stacked: PyTree, slot_masks: jnp.ndarray,
              slot_flags: jnp.ndarray, firsts: jnp.ndarray,
              lasts: jnp.ndarray, toks: jnp.ndarray,
-             mmask: Optional[jnp.ndarray]):
+             mmask: Optional[jnp.ndarray], gdims: Optional[PyTree] = None):
         """shard_map body: returns (chunk-stacked fp32 grads, loss_sum)."""
         d = jax.lax.axis_index("pipe")
         p = jax.tree.map(lambda a: jnp.squeeze(a, 0), stacked)
@@ -345,6 +364,27 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
         adt = p["embed"]["w"].dtype
         p_layers = p["layers"]
         p_shared = {k: v for k, v in p.items() if k != "layers"}
+
+        # ZeRO-3 gather-on-use helpers.  ``gdims`` (static ints, -1 = leaf
+        # stays replicated) indexes the *stacked* tree; the squeeze above
+        # removes the pipe dim (-1) and ``layers_at`` the chunk dim (-1
+        # more), so chunk-level layer leaves gather at dm-2 and shared
+        # leaves at dm-1.  In the backward each gather transposes to a
+        # psum_scatter of the weight cotangent, so dpl/dps/stash emerge
+        # shard-shaped and already cross-DP-summed.
+        if zp and gdims is not None and data_axes:
+            gdl = gdims["layers"]
+            gds = {k: v for k, v in gdims.items() if k != "layers"}
+            gather_l = lambda pl: jax.tree.map(
+                lambda a, dm: a if dm < 0 else
+                gather_params(a, data_axes, dm - 2), pl, gdl)
+            gather_s = lambda ps: jax.tree.map(
+                lambda a, dm: a if dm < 0 else
+                gather_params(a, data_axes, dm - 1), ps, gds)
+            gdims_g = dict(gds, layers=gdl)
+        else:
+            gather_l = gather_s = lambda t: t
+            gdims_g = None
 
         def chunk_fn(pl, ps, x_recv, tok, mm, c, remat=True):
             """Uniform per-chunk program: embed (selected when the chunk is
@@ -449,7 +489,8 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
                 x_in = _dyn(xbuf, tabs["f_xidx"][t, d])
                 tok_f = micro_at(toks, fm)
                 mm_f = None if mmask is None else micro_at(mmask, fm)
-                y_, ce_sum, aux_f = chunk_fn(layers_at(fc), p_shared, x_in,
+                y_, ce_sum, aux_f = chunk_fn(gather_l(layers_at(fc)),
+                                             gather_s(p_shared), x_in,
                                              tok_f, mm_f, fc)
                 ce_m = _psum(ce_sum, data_axes) / jnp.maximum(
                     count_g(tok_f, mm_f), 1.0)
@@ -494,8 +535,10 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
                     dy = _dyn(gbuf, tabs["b_gidx"][t, d])
                     pl_b = layers_at(bc)
                     _, vjp_fn = jax.vjp(
-                        lambda pl_, ps_, x_: chunk_fn(pl_, ps_, x_, tok_b,
-                                                      mm_b, bc, remat=False),
+                        lambda pl_, ps_, x_: chunk_fn(gather_l(pl_),
+                                                      gather_s(ps_), x_,
+                                                      tok_b, mm_b, bc,
+                                                      remat=False),
                         pl_b, p_shared, x_sv)
                     dpl, dps, dx_ = vjp_fn(_cotangents(tok_b, mm_b, bc, dy))
                     pend = jax.tree.map(
@@ -541,8 +584,9 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
                     dy = _dyn(gbuf, tabs["b_gidx"][t, d])
                     pl_b = layers_at(bc)
                     _, vjp_fn = jax.vjp(
-                        lambda pl_, ps_, x_: chunk_fn(pl_, ps_, x_, tok_b,
-                                                      mm_b, bc),
+                        lambda pl_, ps_, x_: chunk_fn(gather_l(pl_),
+                                                      gather_s(ps_), x_,
+                                                      tok_b, mm_b, bc),
                         pl_b, p_shared, x_sv)
                     dpl, dps, dx_ = vjp_fn(_cotangents(tok_b, mm_b, bc, dy))
                     cur = jax.tree.map(lambda a: _dyn(a, bc), gl)
@@ -622,7 +666,16 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             if sp:
                 g = dict(g, final_norm=jax.lax.psum(g["final_norm"],
                                                     tp_axis))
-        g = jax.tree.map(lambda a: _psum(a, data_axes)[None], g)
+        if gdims_g is not None:
+            # ZeRO-3: gathered leaves' grads were already cross-DP-summed
+            # (and re-sharded) by gather_params' backward psum_scatter —
+            # a data psum here would double-count them.  Replicate-fallback
+            # leaves (dm < 0) still need the sum.
+            g = jax.tree.map(
+                lambda a, dm: (_psum(a, data_axes) if dm < 0 else a)[None],
+                g, gdims_g)
+        else:
+            g = jax.tree.map(lambda a: _psum(a, data_axes)[None], g)
         aux_acc = jax.lax.pmean(aux_acc, data_axes) if data_axes else aux_acc
         loss_sum = jax.lax.psum(loss + 0.01 * aux_acc, "pipe")
         return g, loss_sum
@@ -638,8 +691,12 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
         leading 'pipe' axis out of data)."""
         sh = state_shardings(st, mesh, zero, rules=rules)
         wsc = jax.lax.with_sharding_constraint
-        return st._replace(master=wsc(st.master, sh.master),
-                           m=wsc(st.m, sh.m), v=wsc(st.v, sh.v))
+        st = st._replace(master=wsc(st.master, sh.master),
+                         m=wsc(st.m, sh.m), v=wsc(st.v, sh.v))
+        if zp:
+            # ZeRO-3: the bf16 working params are DP-sharded at rest too
+            st = st._replace(params=wsc(st.params, sh.params))
+        return st
 
     def step(state: TrainState, batch: Dict[str, jnp.ndarray]
              ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
@@ -662,7 +719,12 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             state = _zero_constrain(state)
         stacked = stack_pipeline_params(state.params, spec, S,
                                         schedule=schedule, n_chunks=V)
-        stage_specs = pipeline_stage_specs(stacked, mesh, rules=rules)
+        if zp and data_axes:
+            stage_specs, gdims = zero3_stage_specs(stacked, mesh,
+                                                   rules=rules)
+        else:
+            stage_specs = pipeline_stage_specs(stacked, mesh, rules=rules)
+            gdims = None
         dspec = tuple(data_axes) if data_axes else None
         margs = (toks,)
         mspecs = (P(None, dspec, None),)
@@ -673,7 +735,7 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
         def inner(stacked_l, masks_l, flags_l, firsts_l, lasts_l, toks_l,
                   *rest):
             return _run(stacked_l, masks_l, flags_l, firsts_l, lasts_l,
-                        toks_l, rest[0] if rest else None)
+                        toks_l, rest[0] if rest else None, gdims=gdims)
 
         g_st, loss_sum = shard_map(
             inner, mesh=mesh,

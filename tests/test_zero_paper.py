@@ -55,6 +55,28 @@ def test_zero_os_g_params():
     assert round(m.total / GiB, 2) == 9.66
 
 
+def test_sharded_ceil_rounding():
+    """Regression: shard terms must ceil-divide, not floor-divide.  With a
+    DP degree prime to the per-device parameter count, floor division
+    undercounts — every rank's shard is ceil(n/group)-sized (the last rank
+    pads), so shards x group must cover the total."""
+    from repro.core.params import device_params
+
+    spec = get_spec("qwen2-1.5b")
+    cfg = dataclasses.replace(PAPER_CONFIG, dp=7, tp=1, ep=1, etp=1,
+                              zero=ZeROStage.OS)
+    dev = device_params(spec, cfg)
+    assert dev.non_expert % 7, "pick a dp that does NOT divide the count"
+    m = zero_memory(spec, cfg)
+    shard_opt = m.optimizer // 8                 # per-rank sharded count
+    assert shard_opt * 7 >= dev.total, (shard_opt, dev.total)
+    assert shard_opt == -(-dev.total // 7)       # exactly the ceil quotient
+    m3 = zero_memory(spec, dataclasses.replace(cfg,
+                                               zero=ZeROStage.OS_G_PARAMS))
+    assert (m3.params // 2) * 7 >= dev.total
+    assert (m3.grads // 4) * 7 >= dev.total
+
+
 def test_zero_table_monotone():
     tbl = zero_table(SPEC, PAPER_CONFIG)
     totals = [tbl[z.value].total for z in ZeROStage]
