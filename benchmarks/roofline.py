@@ -121,7 +121,8 @@ def _grad_probe(arch, shape_name, vspec, mesh, n_micro, build_kw):
                             build_kw.get("recompute", "none")),
                         capacity_factor=build_kw.get("capacity_factor", 1.25),
                         scan_layers=False,
-                        moe_impl=build_kw.get("moe_impl", "scatter"))
+                        moe_impl=build_kw.get("moe_impl", "scatter"),
+                        backend=build_kw.get("backend", "reference"))
     model = build_model(spec, opts)
     z = ZeROStage(build_kw.get("zero", "os+g"))
     micro_b = max(info["batch"] // n_micro, 1)
@@ -283,9 +284,10 @@ def run_all(shapes=None, archs=None, force: bool = False,
     from repro.configs import get_spec
     os.makedirs(ROOF_DIR, exist_ok=True)
     out = []
+    bk_tag = "__pallas" if kw.get("backend") == "pallas" else ""
     for arch in (archs or ASSIGNED):
         for shape in (shapes or list(SHAPES)):
-            tag = f"{arch}__{shape}__pod16x16{tag_suffix}"
+            tag = f"{arch}__{shape}__pod16x16{bk_tag}{tag_suffix}"
             path = os.path.join(ROOF_DIR, tag + ".json")
             if os.path.exists(path) and not force:
                 with open(path) as f:
@@ -346,6 +348,11 @@ def main():
     ap.add_argument("--zero", default="os+g")
     ap.add_argument("--recompute", default="none")
     ap.add_argument("--attn", default="naive")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="kernel backend for the cost probes (pallas: "
+                         "interpret-mode lowering off-TPU — the probed op "
+                         "mix matches what the executor's fast path runs)")
     ap.add_argument("--moe-impl", default="scatter")
     ap.add_argument("--n-micro", type=int, default=1)
     ap.add_argument("--capacity-factor", type=float, default=1.25)
@@ -360,6 +367,7 @@ def main():
                    force=args.force, tag_suffix=args.tag_suffix,
                    zero=args.zero, recompute=args.recompute,
                    attn_impl=args.attn, moe_impl=args.moe_impl,
+                   backend=args.backend,
                    n_micro=args.n_micro,
                    capacity_factor=args.capacity_factor,
                    mesh_shape=mesh_shape, multi_pod=args.multi_pod)

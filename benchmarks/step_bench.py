@@ -80,7 +80,7 @@ ARTIFACT = os.path.join(os.path.dirname(__file__), "artifacts",
                         "BENCH_step.json")
 # Full config identity: one row per distinct benchmark point, newest wins.
 KEY_FIELDS = ("arch", "schedule", "pp", "dp", "tp", "sp", "ep", "zero",
-              "n_chunks", "n_micro", "batch", "seq_len")
+              "n_chunks", "n_micro", "batch", "seq_len", "backend")
 
 # (schedule, n_chunks, pp, dp, tp, sp, ep, zero) on 8 fake devices.  pp2
 # legs are the CI smoke tier; pp4 legs complete the trajectory.  dualpipe
@@ -188,7 +188,8 @@ def _calibrate_bandwidth() -> float:
 
 
 def run_grid(grid, *, iters: int, out_path: str = ARTIFACT,
-             quiet: bool = False) -> List[Dict[str, Any]]:
+             quiet: bool = False,
+             backend: str = "reference") -> List[Dict[str, Any]]:
     _ensure_fake_devices()
     import dataclasses
     import jax
@@ -210,7 +211,11 @@ def run_grid(grid, *, iters: int, out_path: str = ARTIFACT,
     # the overlapped model prices), while zb1p's no-remat B stashes the
     # pending-dW instead of replaying — the asymmetry that lets zb1p win
     # measured.
-    model = build_model(spec, ModelOptions(recompute=RecomputePolicy.FULL))
+    # ``backend`` keys the rows: "pallas" routes the chunk bodies through
+    # the kernel fast path (interpret mode off-TPU — expect slower wall
+    # clock there; the row exists to pin the trajectory, not to win on CPU)
+    model = build_model(spec, ModelOptions(recompute=RecomputePolicy.FULL,
+                                           backend=backend))
     state0 = init_train_state(model.init(jax.random.PRNGKey(0)))
     batch = make_batch(config_for(spec, BATCH, SEQ), 0)
     peak = _calibrate_peak_flops()
@@ -260,7 +265,7 @@ def run_grid(grid, *, iters: int, out_path: str = ARTIFACT,
         ticks_w = 0 if tab.w_act is None else int((tab.w_act > 0).sum())
         row = {
             "arch": ARCH, "schedule": schedule, "pp": pp, "dp": dp,
-            "tp": tp, "sp": sp, "ep": ep, "zero": zero,
+            "tp": tp, "sp": sp, "ep": ep, "zero": zero, "backend": backend,
             "n_chunks": n_chunks, "n_micro": n_micro,
             "batch": BATCH, "seq_len": SEQ, "n_layers": N_LAYERS,
             "median_s": res.median_s, "mean_s": res.mean_s,
@@ -298,6 +303,10 @@ def write_rows(rows: List[Dict[str, Any]], path: str = ARTIFACT) -> None:
     if os.path.exists(path):
         with open(path) as f:
             existing = json.load(f)
+    # rows predating the backend key ran the jnp reference path — pin it
+    # so they dedupe against fresh reference rows instead of coexisting
+    for r in existing:
+        r.setdefault("backend", "reference")
     merged = merge_rows(existing, rows, KEY_FIELDS)
     os.makedirs(os.path.dirname(path), exist_ok=True)
     with open(path, "w") as f:
@@ -328,7 +337,7 @@ def check_direction(rows: List[Dict[str, Any]], *,
         # other even though their measured times are not comparable
         cell = tuple(r.get(k) for k in
                      ("arch", "pp", "dp", "tp", "sp", "ep", "zero",
-                      "n_micro", "n_chunks", "batch", "seq_len"))
+                      "n_micro", "n_chunks", "batch", "seq_len", "backend"))
         cells.setdefault(cell, []).append(r)
     bad: List[str] = []
     for cell, rs in cells.items():
@@ -373,7 +382,7 @@ def check_convergence(rows: List[Dict[str, Any]], *,
     for r in rows:
         cell = tuple(r.get(k) for k in
                      ("arch", "pp", "dp", "tp", "sp", "ep", "zero",
-                      "n_micro", "batch", "seq_len"))
+                      "n_micro", "batch", "seq_len", "backend"))
         cells.setdefault(cell, {})[r["schedule"]] = r
     for cell, by_sched in cells.items():
         if "1f1b" in by_sched and "zb1p" in by_sched:
@@ -414,6 +423,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "(no new measurements)")
     ap.add_argument("--min-gap", type=float, default=0.10,
                     help="relative predicted gap below which a pair is a tie")
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="kernel backend the measured steps run "
+                         "(rows are keyed on it; 'pallas' is interpret-mode "
+                         "off-TPU — slower wall clock there by design)")
     args = ap.parse_args(argv)
 
     if args.check_direction or args.check_convergence:
@@ -435,7 +449,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 1 if bad else 0
 
     grid = [g for g in GRID if g[2] == 2] if args.smoke else GRID
-    rows = run_grid(grid, iters=args.iters, out_path=args.out)
+    rows = run_grid(grid, iters=args.iters, out_path=args.out,
+                    backend=args.backend)
     print(f"wrote {len(rows)} rows -> {args.out}")
     return 0
 

@@ -183,10 +183,21 @@ def _parse_ep_tag(rec: Dict[str, Any], path: Optional[str] = None) -> int:
     return 1
 
 
+def _parse_backend_tag(rec: Dict[str, Any], path: Optional[str] = None) -> str:
+    """Kernel backend of a ``--pp`` artifact: the explicit ``backend`` field
+    on new records, else the ``__pallas`` tag component, else "reference"
+    (every pre-backend artifact ran the jnp reference path)."""
+    if "backend" in rec:
+        return str(rec["backend"])
+    if path and "__pallas" in os.path.basename(path):
+        return "pallas"
+    return "reference"
+
+
 def validate_pp(arch: str, shape: str, pp: int,
                 mesh_tag: str = "pod16x16", schedule: str = "1f1b",
                 n_chunks: int = 1, zero: str = "os+g", sp: int = 1,
-                ep: Optional[int] = None,
+                ep: Optional[int] = None, backend: str = "reference",
                 tag_suffix: str = "") -> Optional[Dict[str, Any]]:
     """Per-rank validation of a ``dryrun --pp N [--schedule ...]`` artifact:
     XLA's per-rank temp bytes (activations + grads + transients of the rank
@@ -205,9 +216,10 @@ def validate_pp(arch: str, shape: str, pp: int,
     zero_tag = "" if zero == "os+g" else f"__z{zero.replace('+', '')}"
     sp_tag = "" if sp == 1 else f"__sp{sp}"
     ep_tag = "" if ep is None else f"__ep{ep}"
+    bk_tag = "" if backend == "reference" else "__pallas"
     path = os.path.join(
         DRY, f"{arch}__{shape}__{mesh_tag}__pp{pp}{sched_tag}{zero_tag}"
-             f"{sp_tag}{ep_tag}{tag_suffix}.json")
+             f"{sp_tag}{ep_tag}{bk_tag}{tag_suffix}.json")
     if not os.path.exists(path):
         return None
     with open(path) as f:
@@ -222,10 +234,11 @@ def _validate_pp_rec(rec: Dict[str, Any],
     schedule = rec.get("schedule", "1f1b")
     sp = _parse_sp_tag(rec, path)
     ep = _parse_ep_tag(rec, path)
+    backend = _parse_backend_tag(rec, path)
     if rec.get("status") != "ok":
         return {"arch": arch, "shape": shape, "pp": pp,
                 "schedule": schedule, "n_chunks": rec.get("n_chunks", 1),
-                "tp": rec.get("tp"), "sp": sp, "ep": ep,
+                "tp": rec.get("tp"), "sp": sp, "ep": ep, "backend": backend,
                 "zero": rec.get("zero",
                                 rec.get("options", {}).get("zero", "os+g")),
                 "recompute": rec.get("options", {}).get("recompute", "none"),
@@ -265,7 +278,7 @@ def _validate_pp_rec(rec: Dict[str, Any],
     return {
         "arch": arch, "shape": shape, "pp": pp, "status": "ok",
         "schedule": schedule, "n_chunks": rec.get("n_chunks", 1),
-        "tp": rec.get("tp", model_ax), "sp": sp, "ep": ep,
+        "tp": rec.get("tp", model_ax), "sp": sp, "ep": ep, "backend": backend,
         "zero": rec.get("zero", rec.get("options", {}).get("zero", "os+g")),
         "recompute": rec.get("options", {}).get("recompute", "none"),
         "n_micro": n_micro,
@@ -314,7 +327,7 @@ def _pp_artifacts() -> List[Dict[str, Any]]:
         key = (row.get("arch"), row.get("shape"), row.get("pp"),
                row.get("schedule"), row.get("n_chunks"), row.get("tp"),
                row.get("zero"), row.get("sp"), row.get("ep"),
-               row.get("recompute"), row.get("n_micro"))
+               row.get("backend"), row.get("recompute"), row.get("n_micro"))
         by_key[key] = row            # newest artifact wins
     return [by_key[k] for k in sorted(by_key, key=lambda k: tuple(map(str, k)))]
 
@@ -353,21 +366,23 @@ def main():
         print("\n## Per-rank schedule residency (dryrun --pp [--tp --zero "
               "--sp --ep --schedule]) vs estimate_memory(stage=r, "
               "schedule=...)")
-        print("| arch | shape | pp | tp | zero | sp | ep | ac | schedule |"
-              " n_micro | rank0/last XLA (logits-adj) |"
+        print("| arch | shape | pp | tp | zero | sp | ep | backend | ac |"
+              " schedule | n_micro | rank0/last XLA (logits-adj) |"
               " rank0/last analytic act | direction |")
-        print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+        print("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|")
         for r in pp_rows:
             if r.get("status") != "ok":
                 print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
                       f" {r.get('tp', '-')} | {r.get('zero', '-')} |"
                       f" {r.get('sp', '-')} | {r.get('ep', '-')} |"
+                      f" {r.get('backend', 'reference')} |"
                       f" {r.get('recompute', '-')} |"
                       f" {r.get('schedule', '1f1b')} | - | - | - |"
                       f" {r.get('status')} |")
                 continue
             print(f"| {r['arch']} | {r['shape']} | {r['pp']} |"
                   f" {r['tp']} | {r['zero']} | {r['sp']} | {r['ep']} |"
+                  f" {r.get('backend', 'reference')} |"
                   f" {r['recompute']} |"
                   f" {r['schedule']} | {r['n_micro']} |"
                   f" {r['measured_ratio_stage0_over_last']:.2f} |"

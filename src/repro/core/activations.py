@@ -27,6 +27,13 @@ from typing import Dict, Optional
 from .notation import AttentionKind, FamilyKind, MlpKind, ModelSpec
 from .parallel_config import ParallelConfig, RecomputePolicy
 
+# attn_impl values that never materialise the resident s² score buffers:
+# the tiled kernel recomputes scores inside each layer's backward, so the
+# 5·b·n_h·s² term drops from the activation stash.  "chunked" (the jnp
+# lax.scan online-softmax) is deliberately NOT here — its scan residuals
+# still store O(s²) under AD.
+FLASH_ATTN_IMPLS = ("flash", "pallas")
+
 
 def _shard_or_warn(dim: int, tp: int, what: str) -> int:
     """Effective TP divisor of a *channel/fused*-sharded dimension (qkv
@@ -102,7 +109,8 @@ class ActivationBreakdown:
 # ---------------------------------------------------------------------------
 
 def mla_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
-                         cp: int, recompute: RecomputePolicy) -> int:
+                         cp: int, recompute: RecomputePolicy,
+                         attn_impl: str = "naive") -> int:
     """One layer of MLA activations (bytes).
 
     AC None (paper, TP@SP):
@@ -110,6 +118,11 @@ def mla_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
            + 5 b n_h s^2/tp + 2bs d_h n_h/tp + bsh/sp
     The 2bs(d_cq+d_c) latent tensors are NOT divided by sp because the down
     projections are replicated (paper).  AC Full: 2bsh/sp.
+
+    ``attn_impl`` in ``FLASH_ATTN_IMPLS`` drops exactly the 5·b·n_h·s²
+    score/softmax/mask term at AC-None — the tiled kernel keeps the s²
+    blocks transient inside each layer's fwd/bwd.  At SELECTIVE the term
+    is already gone, so flash changes nothing (no double subtraction).
     """
     if spec.attention == AttentionKind.NONE:
         return 0
@@ -130,8 +143,9 @@ def mla_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
         + 2 * b * s * m.d_v * spec.n_h // tp_c
         + b * s * spec.h // sp
     )
-    if recompute == RecomputePolicy.SELECTIVE:
-        # selective = drop the O(s^2) score/softmax/mask tensors (flash-style)
+    if recompute == RecomputePolicy.SELECTIVE \
+            or attn_impl in FLASH_ATTN_IMPLS:
+        # drop the O(s^2) score/softmax/mask tensors (flash-style)
         return none_total - scores
     return none_total
 
@@ -175,9 +189,12 @@ def moe_activation_bytes(spec: ModelSpec, b: int, s: int, *, sp: int, cp: int,
 # ---------------------------------------------------------------------------
 
 def gqa_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
-                         cp: int, recompute: RecomputePolicy) -> int:
+                         cp: int, recompute: RecomputePolicy,
+                         attn_impl: str = "naive") -> int:
     """Standard MHA/GQA/MQA attention block, naive-softmax accounting to
-    mirror the paper's 5 b n_h s² convention."""
+    mirror the paper's 5 b n_h s² convention.  ``attn_impl`` in
+    ``FLASH_ATTN_IMPLS`` drops the s² term at AC-None (see
+    ``mla_activation_bytes``)."""
     s = s // cp
     sp = _seq_shard_or_warn(s, sp)
     if recompute == RecomputePolicy.FULL:
@@ -200,7 +217,8 @@ def gqa_activation_bytes(spec: ModelSpec, b: int, s: int, *, tp: int, sp: int,
         + 2 * b * s * spec.n_h * d // tp_c            # attn context
         + b * s * spec.h // sp                        # o-proj output grad buffer
     )
-    if recompute == RecomputePolicy.SELECTIVE:
+    if recompute == RecomputePolicy.SELECTIVE \
+            or attn_impl in FLASH_ATTN_IMPLS:
         total -= scores
     return total
 
@@ -251,11 +269,13 @@ def layer_activation_bytes(spec: ModelSpec, cfg: ParallelConfig,
                            layer_idx: int) -> ActivationBreakdown:
     b, s = cfg.micro_batch, cfg.seq_len
     kw = dict(tp=cfg.tp, sp=cfg.sp_degree, cp=cfg.cp, recompute=cfg.recompute)
+    # attn_impl only reshapes the attention block's s² accounting
+    akw = dict(kw, attn_impl=cfg.attn_impl)
     attn = 0
     if spec.attention == AttentionKind.MLA:
-        attn = mla_activation_bytes(spec, b, s, **kw)
+        attn = mla_activation_bytes(spec, b, s, **akw)
     elif spec.attention != AttentionKind.NONE:
-        attn = gqa_activation_bytes(spec, b, s, **kw)
+        attn = gqa_activation_bytes(spec, b, s, **akw)
     ssm = ssm_activation_bytes(spec, b, s, **kw)
     if spec.is_moe and layer_idx in spec.moe_layer_indices():
         mlp = moe_activation_bytes(spec, b, s, sp=cfg.sp_degree, cp=cfg.cp,
@@ -406,7 +426,8 @@ def table10(spec: ModelSpec, cfg: ParallelConfig) -> Dict[str, Dict[str, int]]:
     for policy in (RecomputePolicy.NONE, RecomputePolicy.FULL):
         c = dataclasses.replace(cfg, recompute=policy)
         b, s = c.micro_batch, c.seq_len
-        kw = dict(tp=c.tp, sp=c.sp_degree, cp=c.cp, recompute=policy)
+        kw = dict(tp=c.tp, sp=c.sp_degree, cp=c.cp, recompute=policy,
+                  attn_impl=c.attn_impl)
         mla = mla_activation_bytes(spec, b, s, **kw)
         moe = moe_activation_bytes(spec, b, s, sp=c.sp_degree, cp=c.cp,
                                    ep=c.ep, recompute=policy)

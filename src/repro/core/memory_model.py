@@ -64,11 +64,17 @@ def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
                     training: bool = True,
                     schedule: Optional[str] = None,
                     n_chunks: int = 1,
-                    n_micro: Optional[int] = None) -> MemoryEstimate:
+                    n_micro: Optional[int] = None,
+                    attn_impl: Optional[str] = None) -> MemoryEstimate:
     """Per-device memory estimate for one PP stage.
 
     ``training=False`` models inference/serving: no grads/optimizer, and the
     'activations' term is the KV-cache / recurrent-state working set.
+
+    ``attn_impl`` (``"naive"`` | ``"flash"``/``"pallas"`` | ``"chunked"``)
+    overrides ``cfg.attn_impl`` for this estimate: flash impls drop the
+    resident 5·b·n_h·s² score buffers from the AC-None activation stash
+    (``activations.FLASH_ATTN_IMPLS``); all other terms are unchanged.
 
     ``schedule`` (one of ``core.schedules.SCHEDULES``) switches to
     schedule-aware accounting for PP rank ``stage``: activations come from
@@ -91,6 +97,8 @@ def estimate_memory(spec: ModelSpec, cfg: ParallelConfig, *,
     ``stage=``/``in_flight_microbatches=`` path is the schedule-unaware
     paper view and is unchanged.
     """
+    if attn_impl is not None:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
     if schedule is not None and not training:
         raise ValueError(
             "schedule-aware accounting models training residency; for "

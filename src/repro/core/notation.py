@@ -261,7 +261,8 @@ class ModelSpec:
 
 
 def tp_violations(spec: "ModelSpec", tp: int, *, sp: int = 1,
-                  seq_len: Optional[int] = None, ep: int = 1):
+                  seq_len: Optional[int] = None, ep: int = 1,
+                  attn_impl: str = "naive"):
     """Dims a TP degree fails to divide exactly, as human-readable strings
     (empty list = cleanly divisible).  Shared by the analytic guard
     (``core.activations``), the planner's runnable marking and the
@@ -276,10 +277,21 @@ def tp_violations(spec: "ModelSpec", tp: int, *, sp: int = 1,
 
     ``ep`` extends it to expert parallelism: the expert-dim weight shard
     requires ``n_routed % ep == 0`` (the analytic fallback is
-    EP-replicated accounting — ``core.activations._shard_or_warn``)."""
+    EP-replicated accounting — ``core.activations._shard_or_warn``).
+
+    ``attn_impl`` in ``("flash", "pallas")`` extends it to the flash
+    kernel's tiling: block_q = min(128, s) must divide the sequence the
+    kernel sees (the FULL sequence — SP gathers before attention) — the
+    kernel pads internally, but the analytic model does not price pad
+    blocks, so the executor refuses padded-flash configs."""
     bad = []
     if sp > 1 and seq_len is not None and seq_len % sp:
         bad.append(f"s={seq_len} (sp={sp})")
+    if attn_impl in ("flash", "pallas") and seq_len is not None \
+            and spec.attention != AttentionKind.NONE:
+        bq = min(128, seq_len)
+        if seq_len % bq:
+            bad.append(f"s={seq_len} (flash block_q={bq})")
     if ep > 1 and spec.is_moe and spec.moe.n_routed % ep:
         bad.append(f"n_routed={spec.moe.n_routed} (ep={ep})")
     if tp <= 1:

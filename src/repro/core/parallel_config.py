@@ -73,6 +73,17 @@ class ParallelConfig:
     micro_batch: int = 1
     seq_len: int = 4096
     dtype: DTypePolicy = BF16_POLICY
+    # Attention score-path implementation the executor runs:
+    #   "naive"   — materialises the (b, n_h, s, s) score/softmax/mask
+    #               buffers (the paper's 5·b·n_h·s² term);
+    #   "flash" / "pallas" — tiled online-softmax kernel: the s² buffers
+    #               exist only transiently inside one layer's fwd/bwd and
+    #               never join the resident activation stash;
+    #   "chunked" — jnp lax.scan online-softmax: O(s) live memory in the
+    #               forward, but its scan carries still stash O(s²)
+    #               residuals under AD, so it does NOT get the flash
+    #               discount in the memory model.
+    attn_impl: str = "naive"
     # §6: temporary comm buffers [0.8, 2] GB and fragmentation [5%, 30%].
     comm_buffer_bytes: int = int(0.8 * 2**30)
     fragmentation: float = 0.05
@@ -101,10 +112,11 @@ class ParallelConfig:
         return self.tp if self.sp else 1
 
     def describe(self) -> str:
+        attn = "" if self.attn_impl == "naive" else f" attn={self.attn_impl}"
         return (f"DP{self.dp}@TP{self.tp}@PP{self.pp}@EP{self.ep}@ETP{self.etp}"
                 f"@EDP{self.edp}@CP{self.cp}@SP{self.sp_degree}"
                 f" zero={self.zero.value} ac={self.recompute.value}"
-                f" b={self.micro_batch} s={self.seq_len}")
+                f" b={self.micro_batch} s={self.seq_len}{attn}")
 
 
 # Paper Table 5 reference case.

@@ -88,7 +88,7 @@ def executor_runnable(spec: ModelSpec, cfg: ParallelConfig, *,
     if spec.attention == AttentionKind.NONE:
         return False, "attention-free family (pipeline runtime unsupported)"
     bad = tp_violations(spec, cfg.tp, sp=cfg.sp_degree, seq_len=cfg.seq_len,
-                        ep=cfg.ep)
+                        ep=cfg.ep, attn_impl=cfg.attn_impl)
     if bad:
         return False, f"indivisible parallel degrees: {', '.join(bad)}"
     if cfg.cp > 1:

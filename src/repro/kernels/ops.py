@@ -1,7 +1,25 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernels TARGET TPU and are validated in interpret mode per the task brief).
+TPU-vs-interpret contract
+-------------------------
+The kernels TARGET TPU; everywhere else they run in Pallas interpret
+mode (pure-jax emulation — numerically identical, no Mosaic lowering).
+The default is decided ONCE, at import time, from
+``jax.default_backend()`` and cached in ``_INTERPRET``:
+
+* it must not be re-read inside a jitted body — ``interpret`` is a
+  static argument of ``pallas_call``, so a per-call probe would bake a
+  fresh Python bool into every trace and re-evaluate the backend query
+  under jit for each call-site permutation;
+* callers that jit *around* these wrappers (the model stack, the 3D
+  executor) therefore see one stable configuration per process, which
+  is the granularity at which the backend can actually change.
+
+Pass ``interpret=`` explicitly to override per call (e.g. forcing
+interpret mode on TPU for a numerics cross-check).  The public wrappers
+are thin Python shims that resolve the default *before* dispatching to
+the jitted inner functions, so ``interpret`` reaches jit already
+concrete.
 """
 
 from __future__ import annotations
@@ -15,38 +33,54 @@ from .mla_attention import flash_attention_pallas
 from .moe_gmm import gmm_pallas, pad_groups
 from .rmsnorm import rmsnorm_pallas
 
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# Resolved once at import: interpret everywhere except real TPU.
+_INTERPRET: bool = jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "gemma_style",
                                              "block_rows", "interpret"))
-def rmsnorm(x, scale, *, eps: float = 1e-6, gemma_style: bool = False,
-            block_rows: int = 256, interpret: bool = None):
-    interpret = _default_interpret() if interpret is None else interpret
+def _rmsnorm_jit(x, scale, *, eps, gemma_style, block_rows, interpret):
     return rmsnorm_pallas(x, scale, eps=eps, gemma_style=gemma_style,
                           block_rows=block_rows, interpret=interpret)
 
 
+def rmsnorm(x, scale, *, eps: float = 1e-6, gemma_style: bool = False,
+            block_rows: int = 256, interpret: bool = None):
+    interpret = _INTERPRET if interpret is None else interpret
+    return _rmsnorm_jit(x, scale, eps=eps, gemma_style=gemma_style,
+                        block_rows=block_rows, interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q",
                                              "block_k", "interpret"))
-def flash_attention(q, k, v, *, scale: float, causal: bool = True,
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: bool = None):
-    interpret = _default_interpret() if interpret is None else interpret
+def _flash_attention_jit(q, k, v, *, scale, causal, block_q, block_k,
+                         interpret):
     return flash_attention_pallas(q, k, v, scale=scale, causal=causal,
                                   block_q=block_q, block_k=block_k,
                                   interpret=interpret)
 
 
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    interpret = _INTERPRET if interpret is None else interpret
+    return _flash_attention_jit(q, k, v, scale=scale, causal=causal,
+                                block_q=block_q, block_k=block_k,
+                                interpret=interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
                                              "interpret"))
-def gmm(lhs, rhs, expert_map, *, block_m: int = 128, block_n: int = 128,
-        interpret: bool = None):
-    interpret = _default_interpret() if interpret is None else interpret
+def _gmm_jit(lhs, rhs, expert_map, *, block_m, block_n, interpret):
     return gmm_pallas(lhs, rhs, expert_map, block_m=block_m, block_n=block_n,
                       interpret=interpret)
+
+
+def gmm(lhs, rhs, expert_map, *, block_m: int = 128, block_n: int = 128,
+        interpret: bool = None):
+    interpret = _INTERPRET if interpret is None else interpret
+    return _gmm_jit(lhs, rhs, expert_map, block_m=block_m, block_n=block_n,
+                    interpret=interpret)
 
 
 __all__ = ["rmsnorm", "flash_attention", "gmm", "pad_groups"]

@@ -143,7 +143,7 @@ def build_step(arch: str, shape_name: str, *, attn_impl: str = "naive",
                recompute: str = "none", zero: str = "os+g",
                n_micro: int = 1, capacity_factor: float = 1.25,
                scan_layers: bool = True, spec_override=None,
-               moe_impl: str = "scatter"):
+               moe_impl: str = "scatter", backend: str = "reference"):
     """Returns (fn, abstract_args, in_shardings, out_shardings, meta)."""
     spec0 = spec_override if spec_override is not None else get_spec(arch)
     spec = spec_for_shape(spec0, shape_name)
@@ -152,7 +152,8 @@ def build_step(arch: str, shape_name: str, *, attn_impl: str = "naive",
                         recompute=RecomputePolicy(recompute),
                         capacity_factor=capacity_factor,
                         scan_layers=scan_layers,
-                        moe_impl=moe_impl)
+                        moe_impl=moe_impl,
+                        backend=backend)
     model = build_model(spec, opts)
     mesh = None  # bound by caller via axis_rules
     z = ZeROStage(zero)
@@ -385,8 +386,15 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
     # over 'model', experts replicated) — so an __ep1/__ep2 artifact pair
     # isolates exactly the dispatch-buffer /ep shrink.
     ep_tag = "" if ep is None else f"__ep{ep}"
+    # --backend pallas: the kernel fast path.  The probe only COMPILES
+    # (interpret-mode pallas lowers to pure jax ops off-TPU), but the
+    # analytic column switches to flash accounting — cfg.attn_impl drops
+    # the resident 5·b·n_h·s² buffers — so the tagged __pallas artifact
+    # pairs with its untagged twin to isolate exactly that delta.
+    backend = build_kw.get("backend", "reference")
+    bk_tag = "" if backend == "reference" else "__pallas"
     tag = (f"{arch}__{shape_name}__{mesh_tag}__pp{pp}{sched_tag}{zero_tag}"
-           f"{sp_tag}{ep_tag}{tag_suffix}")
+           f"{sp_tag}{ep_tag}{bk_tag}{tag_suffix}")
     path = os.path.join(ART_DIR, tag + ".json")
     if os.path.exists(path) and not force:
         with open(path) as f:
@@ -396,6 +404,7 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "pp": pp,
                            "schedule": schedule, "n_chunks": v,
                            "tp": model_ax, "zero": zero, "sp": sp,
+                           "backend": backend,
                            "mesh": mesh_tag, "options": build_kw}
     if ep is not None:
         rec["ep"] = ep
@@ -412,7 +421,8 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
             attn_impl=build_kw.get("attn_impl", "naive"),
             recompute=RecomputePolicy(build_kw.get("recompute", "none")),
             capacity_factor=build_kw.get("capacity_factor", 1.25),
-            moe_impl=build_kw.get("moe_impl", "scatter"))
+            moe_impl=build_kw.get("moe_impl", "scatter"),
+            backend=backend)
         model = build_model(spec, opts)
         params_abs = model.abstract_params()
         mesh = make_production_mesh(multi_pod=multi_pod,
@@ -439,7 +449,9 @@ def run_pp(arch: str, shape_name: str, pp: int, *, multi_pod: bool = False,
             dp=dp, tp=model_ax, pp=pp, ep=ep_eff, etp=1, sp=sp > 1,
             zero=ZeROStage(build_kw.get("zero", "os+g")),
             recompute=RecomputePolicy(build_kw.get("recompute", "none")),
-            micro_batch=max(b_micro // dp, 1), seq_len=info["seq"])
+            micro_batch=max(b_micro // dp, 1), seq_len=info["seq"],
+            attn_impl="flash" if backend == "pallas"
+            else build_kw.get("attn_impl", "naive"))
         sched = make_schedule(schedule, pp, n_micro, n_chunks=v)
         all_chunks = rank_chunk_layers(spec, pp, schedule=schedule,
                                        n_chunks=v)
@@ -540,7 +552,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             + "x".join(map(str, mesh_shape))
     else:
         mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
-    tag = f"{arch}__{shape_name}__{mesh_tag}{tag_suffix}"
+    bk_tag = "" if build_kw.get("backend", "reference") == "reference" \
+        else "__pallas"
+    tag = f"{arch}__{shape_name}__{mesh_tag}{bk_tag}{tag_suffix}"
     path = os.path.join(ART_DIR, tag + ".json")
     if os.path.exists(path) and not force:
         with open(path) as f:
@@ -602,6 +616,16 @@ def main() -> int:
     ap.add_argument("--recompute", default="none",
                     choices=[r.value for r in RecomputePolicy])
     ap.add_argument("--attn", default="naive", choices=["naive", "chunked"])
+    ap.add_argument("--backend", default="reference",
+                    choices=["reference", "pallas"],
+                    help="kernel backend for the hot ops: 'pallas' routes "
+                         "rmsnorm/attention/grouped-mlp through the Pallas "
+                         "kernels (interpret mode off-TPU; compile-only in "
+                         "this probe), upgrades causal attention to the "
+                         "flash kernel and switches the analytic column to "
+                         "flash accounting (drops the resident 5·b·n_h·s² "
+                         "buffers); tags the artifact __pallas — run the "
+                         "tagged/untagged pair to measure the delta")
     ap.add_argument("--n-micro", type=int, default=1)
     ap.add_argument("--pp", type=int, default=1,
                     help="pipeline stages: >1 compiles each stage as its own "
@@ -667,7 +691,7 @@ def main() -> int:
     build_kw = dict(zero=args.zero, recompute=args.recompute,
                     attn_impl=args.attn, n_micro=args.n_micro,
                     capacity_factor=args.capacity_factor,
-                    moe_impl=args.moe_impl)
+                    moe_impl=args.moe_impl, backend=args.backend)
 
     combos = []
     if args.all:

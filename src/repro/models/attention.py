@@ -133,18 +133,12 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def gqa_forward(p: Params, spec: ModelSpec, x: jnp.ndarray,
                 positions: jnp.ndarray, *, impl: str = "naive",
                 window: Optional[int] = None) -> jnp.ndarray:
+    from . import backend as B
     q, k, v = _qkv(p, spec, x, positions)
     n_rep = spec.n_h // spec.n_kv
     k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
     scale = spec.d_head ** -0.5
-    if impl == "pallas" and window is None:
-        from repro.kernels import ops as K
-        ctx = K.flash_attention(q, k, v, scale=scale, causal=True)
-    elif impl == "chunked":
-        ctx = chunked_attention(q, k, v, scale, window=window)
-    else:
-        mask = causal_mask(x.shape[1], window)
-        ctx = naive_attention(q, k, v, mask, scale)
+    ctx = B.attention(q, k, v, scale=scale, impl=impl, window=window)
     b, s = x.shape[:2]
     return ctx.reshape(b, s, spec.n_h * spec.d_head) @ p["wo"]
 

@@ -40,7 +40,7 @@ def mla_init(key: jax.Array, spec: ModelSpec, dtype=jnp.bfloat16) -> Params:
 
 
 def _towers(p: Params, spec: ModelSpec, x: jnp.ndarray,
-            positions: jnp.ndarray, tpf=None):
+            positions: jnp.ndarray, tpf=None, backend: str = "reference"):
     """Shared by train fwd and prefill: returns q (nope‖rope), k (nope‖rope), v.
 
     ``tpf`` (optional) is the executor's tensor-parallel entry operator
@@ -61,14 +61,17 @@ def _towers(p: Params, spec: ModelSpec, x: jnp.ndarray,
     the whole attention branch).  The tower weight grads are instead
     completed by the executor's post-loop 'model'-axis psum.
     """
+    from . import backend as B
     m = spec.mla
     b, s, _ = x.shape
     tpf = tpf if tpf is not None else (lambda t: t)
-    cq = tpf(rmsnorm(p["q_norm"], x @ p["w_dq"], spec.norm_eps))
+    cq = tpf(B.rmsnorm(p["q_norm"], x @ p["w_dq"], spec.norm_eps,
+                       backend=backend))
     q_nope = (cq @ p["w_uq"]).reshape(b, s, spec.n_h, m.d_h)
     q_rope = apply_rope((cq @ p["w_qr"]).reshape(b, s, spec.n_h, m.d_hr),
                         positions, spec.rope_theta)
-    c_kv = tpf(rmsnorm(p["kv_norm"], x @ p["w_dkv"], spec.norm_eps))
+    c_kv = tpf(B.rmsnorm(p["kv_norm"], x @ p["w_dkv"], spec.norm_eps,
+                         backend=backend))
     k_nope = (c_kv @ p["w_uk"]).reshape(b, s, spec.n_h, m.d_h)
     k_rope = apply_rope((x @ p["w_kr"]).reshape(b, s, 1, m.d_hr),
                         positions, spec.rope_theta)
@@ -81,20 +84,13 @@ def _towers(p: Params, spec: ModelSpec, x: jnp.ndarray,
 
 def mla_forward(p: Params, spec: ModelSpec, x: jnp.ndarray,
                 positions: jnp.ndarray, *, impl: str = "naive",
-                tpf=None) -> jnp.ndarray:
+                tpf=None, backend: str = "reference") -> jnp.ndarray:
+    from . import backend as B
     m = spec.mla
     b, s, _ = x.shape
-    q, k, v = _towers(p, spec, x, positions, tpf)
+    q, k, v = _towers(p, spec, x, positions, tpf, backend=backend)
     scale = (m.d_h + m.d_hr) ** -0.5
-    if impl == "pallas":
-        from repro.kernels import ops as K
-        ctx = K.flash_attention(q, k, v, scale=scale, causal=True)
-    elif impl == "chunked":
-        from .attention import chunked_attention
-        ctx = chunked_attention(q, k, v, scale)
-    else:
-        from .attention import causal_mask, naive_attention
-        ctx = naive_attention(q, k, v, causal_mask(s), scale)
+    ctx = B.mla_attention(q, k, v, scale=scale, impl=impl)
     return ctx.reshape(b, s, spec.n_h * m.d_v) @ p["w_o"]
 
 

@@ -113,7 +113,8 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
                 tp_f=None, tp_g=None,
                 sp_axis: Optional[str] = None,
                 ep: int = 1,
-                ep_axis: Optional[str] = None) -> MoEOutput:
+                ep_axis: Optional[str] = None,
+                backend: str = "reference") -> MoEOutput:
     """x: (b, s, h) -> (b, s, h).
 
     DeepSeek-v3 uses sigmoid scoring + top-k renormalisation; classic top-k
@@ -165,7 +166,8 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
             raise ValueError(f"ep={ep} does not divide n_routed={E}")
         return _moe_forward_ep(p, spec, x, capacity_factor=capacity_factor,
                                router_impl=router_impl, tp_f=tp_f, tp_g=tp_g,
-                               sp_axis=sp_axis, ep=ep, ep_axis=ep_axis)
+                               sp_axis=sp_axis, ep=ep, ep_axis=ep_axis,
+                               backend=backend)
 
     probs, gates, eids = _route(p["router"], spec, xt, router_impl)
 
@@ -190,10 +192,12 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
     if tp_f is not None:
         buf = tp_f(buf)
 
-    # expert FFN (SwiGLU), batched over the expert dim
-    a = jax.nn.silu(jnp.einsum("ech,ehf->ecf", buf, p["we_gate"]))
-    a = a * jnp.einsum("ech,ehf->ecf", buf, p["we_up"])
-    out_buf = jnp.einsum("ecf,efh->ech", a, p["we_down"])
+    # expert FFN (SwiGLU), batched over the expert dim — the backend's
+    # grouped_mlp (pallas: three grouped GEMMs over the flattened
+    # static-capacity rows; reference: the einsum triple)
+    from .backend import grouped_mlp
+    out_buf = grouped_mlp(buf, p["we_gate"], p["we_up"], p["we_down"],
+                          backend=backend)
     if tp_g is not None:
         out_buf = tp_g(out_buf)
 
@@ -213,7 +217,8 @@ def moe_forward(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
 def _moe_forward_ep(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
                     capacity_factor: float, router_impl: str,
                     tp_f, tp_g, sp_axis: Optional[str],
-                    ep: int, ep_axis: str) -> MoEOutput:
+                    ep: int, ep_axis: str,
+                    backend: str = "reference") -> MoEOutput:
     """True expert parallelism inside the manual-collectives executor
     (paper §3.3): weights sharded ``(E/ep, h, h_E)`` on the expert dim over
     ``ep_axis``, token exchange via two ``lax.all_to_all``\\ s.
@@ -300,9 +305,11 @@ def _moe_forward_ep(p: Params, spec: ModelSpec, x: jnp.ndarray, *,
     buf = jnp.zeros((E_loc, c_loc, h), x.dtype) \
         .at[eid_c, pos_ec].add(rows * keep_e[:, None].astype(x.dtype))
 
-    a = jax.nn.silu(jnp.einsum("ech,ehf->ecf", buf, p["we_gate"]))
-    a = a * jnp.einsum("ech,ehf->ecf", buf, p["we_up"])
-    out_buf = jnp.einsum("ecf,efh->ech", a, p["we_down"])
+    # local grouped FFN on the (E/ep, C, h) post-a2a buffer — the EP shard
+    # the pallas grouped GEMM sees (expert-dim-sharded weights, full hidden)
+    from .backend import grouped_mlp
+    out_buf = grouped_mlp(buf, p["we_gate"], p["we_up"], p["we_down"],
+                          backend=backend)
 
     back = (out_buf[eid_c, pos_ec] * keep_e[:, None].astype(x.dtype)) \
         .reshape(ep, c_send, h)

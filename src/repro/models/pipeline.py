@@ -53,8 +53,9 @@ from repro.core.notation import AttentionKind, FamilyKind, ModelSpec
 from repro.core.params import pp_stage_layers
 from repro.parallel.axes import logical_constraint
 from . import attention as A
+from . import backend as B
 from . import mla as M
-from .layers import embed_apply, mlp_apply, rmsnorm
+from .layers import embed_apply, mlp_apply
 from .moe import moe_forward
 from .transformer import ModelOptions, _remat, stack_apply
 
@@ -267,8 +268,8 @@ def make_chunk_fn(spec: ModelSpec, opts: ModelOptions,
                                positions, True, window=window)
             aux = aux + a
         if is_last:
-            x = rmsnorm(chunk_params["final_norm"], x, spec.norm_eps,
-                        gemma_style=gemma)
+            x = B.rmsnorm(chunk_params["final_norm"], x, spec.norm_eps,
+                          gemma_style=gemma, backend=B.resolve_backend(opts))
             if spec.tie_embeddings:
                 logits = x @ chunk_params["embed"]["w"].T
             else:
@@ -436,8 +437,17 @@ def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
         tpf = (lambda t: copy_to_tp(t, tp_axis)) if tp_axis else (lambda t: t)
         tpg = (lambda t: reduce_from_tp(t, tp_axis)) if tp_axis \
             else (lambda t: t)
-    h1 = rmsnorm(p["ln1"], x, spec.norm_eps, gemma_style=gemma)
-    if spec.attention == AttentionKind.MLA:
+    # ONE backend resolution per slot: the pallas kernels run on the
+    # pre-sharded operands the f/g/ğ operators deliver — flash sees the
+    # TP-local n_h/tp heads on the gathered full sequence, grouped_mlp the
+    # (E/ep, C, h) local dispatch buffer (see models.backend's contract)
+    backend = B.resolve_backend(opts)
+    is_mla = spec.attention == AttentionKind.MLA
+    attn_impl = B.resolve_attn_impl(opts, causal=True,
+                                    window=None if is_mla else window)
+    h1 = B.rmsnorm(p["ln1"], x, spec.norm_eps, gemma_style=gemma,
+                   backend=backend)
+    if is_mla:
         # MLA's replicated down-projections run redundantly on every shard;
         # the f operator sits on the compressed latents inside _towers.
         # Under SP the towers consume the *gathered* full-sequence view
@@ -451,13 +461,15 @@ def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
         # (train.pipeline_loop).
         lat_f = None if (sp or not tp_axis) else tpf
         mix = M.mla_forward(p["attn"], spec, tpf(h1) if sp else h1,
-                            positions, impl=opts.attn_impl, tpf=lat_f)
+                            positions, impl=attn_impl, tpf=lat_f,
+                            backend=backend)
     else:
         mix = A.gqa_forward(p["attn"], spec, tpf(h1), positions,
-                            impl=opts.attn_impl, window=window)
+                            impl=attn_impl, window=window)
     mix = tpg(mix)
     x = x + mix * mask.astype(x.dtype)
-    h2 = rmsnorm(p["ln2"], x, spec.norm_eps, gemma_style=gemma)
+    h2 = B.rmsnorm(p["ln2"], x, spec.norm_eps, gemma_style=gemma,
+                   backend=backend)
     aux = jnp.zeros((), jnp.float32)
     has_mlp, has_moe = "mlp" in p, "moe" in p
     if has_moe:
@@ -467,7 +479,8 @@ def _slot_apply(p: PyTree, spec: ModelSpec, opts: ModelOptions,
                           tp_f=tpf if tp_axis else None,
                           tp_g=tpg if tp_axis else None,
                           sp_axis=tp_axis if sp else None,
-                          ep=ep, ep_axis=tp_axis if ep > 1 else None)
+                          ep=ep, ep_axis=tp_axis if ep > 1 else None,
+                          backend=backend)
         sel = moe_flag.astype(x.dtype)
         delta = out.y * sel
         if has_mlp:

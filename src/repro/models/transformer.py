@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from repro.core.notation import AttentionKind, FamilyKind, ModelSpec
 from repro.core.parallel_config import RecomputePolicy
 from . import attention as A
+from . import backend as B
 from . import mla as M
 from . import moe as E
 from . import ssm as S
@@ -30,7 +31,13 @@ class ModelOptions:
     attn_impl: str = "naive"          # "naive" | "chunked" (flash-style)
     capacity_factor: float = 1.25
     recompute: RecomputePolicy = RecomputePolicy.NONE
-    use_pallas: bool = False          # route hot ops through Pallas kernels
+    # Kernel backend for the hot ops (rmsnorm / attention / grouped_mlp):
+    # "reference" (jnp) | "pallas" — resolved once per call site by
+    # models.backend.resolve_backend.  "pallas" upgrades causal attention
+    # to the flash kernel (attn_impl falls back loudly where the kernel's
+    # contract doesn't hold — see backend.attention_fallbacks).
+    backend: str = "reference"
+    use_pallas: bool = False          # deprecated alias for backend="pallas"
     router_impl: str = "softmax"      # "softmax" | "sigmoid" (deepseek-v3)
     # scan (compile-once) vs python-loop (unrolled) over layers.  Unrolled is
     # used by the roofline cost probes: XLA's cost_analysis counts a while
@@ -57,10 +64,8 @@ def _remat(fn: Callable, policy: RecomputePolicy) -> Callable:
 
 def _norm(p, x, spec: ModelSpec, opts: Optional[ModelOptions] = None):
     gemma = spec.name.startswith("gemma")
-    if opts is not None and opts.use_pallas:
-        from repro.kernels import ops as K
-        return K.rmsnorm(x, p["scale"], eps=spec.norm_eps, gemma_style=gemma)
-    return rmsnorm(p, x, spec.norm_eps, gemma_style=gemma)
+    return B.rmsnorm(p, x, spec.norm_eps, gemma_style=gemma,
+                     backend=B.resolve_backend(opts))
 
 
 # ---------------------------------------------------------------------------
@@ -99,11 +104,13 @@ def block_apply(p: Params, spec: ModelSpec, opts: ModelOptions,
     """One transformer layer; returns (x, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = _norm(p["ln1"], x, spec, opts)
-    attn_impl = "pallas" if (opts.use_pallas and causal) else opts.attn_impl
+    backend = B.resolve_backend(opts)
+    attn_impl = B.resolve_attn_impl(opts, causal=causal, window=window)
 
     mix = None
     if spec.attention == AttentionKind.MLA:
-        mix = M.mla_forward(p["attn"], spec, h, positions, impl=attn_impl)
+        mix = M.mla_forward(p["attn"], spec, h, positions, impl=attn_impl,
+                            backend=backend)
     elif spec.attention != AttentionKind.NONE:
         if causal:
             mix = A.gqa_forward(p["attn"], spec, h, positions,
@@ -154,7 +161,8 @@ def block_apply(p: Params, spec: ModelSpec, opts: ModelOptions,
         else:
             out = E.moe_forward(p["moe"], spec, h2,
                                 capacity_factor=opts.capacity_factor,
-                                router_impl=opts.router_impl)
+                                router_impl=opts.router_impl,
+                                backend=backend)
         x = x + out.y
         aux = aux + out.aux_loss
     elif spec.h_ff:

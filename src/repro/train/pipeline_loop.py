@@ -187,7 +187,8 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.notation import AttentionKind
 from repro.core.parallel_config import ZeROStage
-from repro.models.layers import embed_apply, rmsnorm
+from repro.models import backend as B
+from repro.models.layers import embed_apply
 from repro.models.model import Model
 from repro.models.pipeline import (check_pipeline_supported,
                                    chunked_partition, pipeline_stage_apply,
@@ -409,7 +410,8 @@ def make_pipeline_train_step(model: Model, cfg: TrainConfig, mesh: Mesh, *,
             y, aux = pipeline_stage_apply(pl, spec_run, opts, x, positions,
                                           smask[c], sflag[c], tp_axis,
                                           sp=sp, ep=ep, remat=remat)
-            z = rmsnorm(ps["final_norm"], y, spec.norm_eps, gemma_style=gemma)
+            z = B.rmsnorm(ps["final_norm"], y, spec.norm_eps,
+                          gemma_style=gemma, backend=B.resolve_backend(opts))
             w_out = ps["embed"]["w"].T if spec.tie_embeddings \
                 else ps["head"]["w"]
             if tp_axis:
